@@ -1,0 +1,111 @@
+"""Beyond-paper benchmarks: DyDD applied to the LM framework layers
+(DESIGN.md §4) — expert balancing and data-parallel token balancing."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import dydd
+from repro.data import pipeline
+
+
+def moe_expert_balance():
+    """DyDD expert balancing vs plain capacity clamping on a skewed router
+    (tokens dropped per layer, balance ratio)."""
+    from repro import configs
+    from repro.models import moe, nn
+    import dataclasses
+
+    cfg = configs.get_smoke_config("olmoe_1b_7b").scaled(
+        d_model=128, num_experts=16, experts_per_token=4,
+        capacity_factor=1.0)
+    b = nn.Builder("init", key=jax.random.PRNGKey(0), dtype=jnp.float32)
+    p = moe.make_moe_params(b, cfg)
+    router = np.array(p["router"], copy=True)
+    rng = np.random.default_rng(0)
+    router += rng.normal(size=router.shape) * 0.5   # skew
+    p = dict(p, router=jnp.asarray(router))
+    x = 0.2 * jax.random.normal(jax.random.PRNGKey(1), (4, 256, 128))
+
+    rows = []
+    for bal in (False, True):
+        cfg2 = dataclasses.replace(cfg, moe_dydd_balance=bal)
+        counts, target = moe.load_balance_stats(cfg2, p, x)
+        counts = np.asarray(counts, dtype=np.float64)
+        E_router = dydd.balance_ratio(counts)
+        E_target = dydd.balance_ratio(np.asarray(target))
+        y = moe.apply_moe(cfg2, p, x)
+        mass = float(jnp.sum(jnp.abs(y)))
+        rows.append((bal, E_router, E_target, mass))
+        print(f"  dydd_balance={bal}: router E={E_router:.3f} "
+              f"post-schedule E={E_target:.3f} output mass={mass:.1f}")
+    return rows
+
+
+def loader_balance(windows: int = 20):
+    """Token-load balance ratio across DP shards with/without DyDD."""
+    rows = []
+    for bal in (False, True):
+        ld = pipeline.BalancedLoader(vocab_size=32000, dp=16,
+                                     batch_per_shard=2, seq=1024, seed=0,
+                                     balance=bal)
+        es, moved = [], 0
+        t0 = time.perf_counter()
+        for _ in range(windows):
+            ld.next_batch()
+            es.append(ld.last_stats.efficiency_after)
+            moved += ld.last_stats.docs_moved
+        t = time.perf_counter() - t0
+        print(f"  balance={bal}: mean E={np.mean(es):.3f} "
+              f"min E={np.min(es):.3f} docs moved={moved} "
+              f"({t/windows*1e3:.1f} ms/window)")
+        rows.append((bal, float(np.mean(es)), float(np.min(es))))
+    return rows
+
+
+def scheduling_scalability():
+    """DyDD scheduling cost vs p on mesh-topology graphs (the '1000+
+    nodes' sanity check: the p x p lstsq is microseconds up to p=4096)."""
+    rows = []
+    for p, edges_fn in [(64, dydd.ring_edges), (256, dydd.ring_edges),
+                        (1024, dydd.ring_edges),
+                        (256, lambda p: dydd.grid_edges(16, 16)),
+                        (1024, lambda p: dydd.grid_edges(32, 32)),
+                        (4096, lambda p: dydd.grid_edges(64, 64))]:
+        rng = np.random.default_rng(p)
+        loads = rng.integers(0, 2000, p)
+        edges = edges_fn(p)
+        t0 = time.perf_counter()
+        final, scheds = dydd.balance(loads, edges, max_rounds=8)
+        t = time.perf_counter() - t0
+        print(f"  p={p:5d} |E|={len(edges):6d} rounds={len(scheds)} "
+              f"E={dydd.balance_ratio(final):.3f} t={t*1e3:.1f} ms")
+        rows.append((p, t, dydd.balance_ratio(final)))
+    return rows
+
+
+def dydd_2d_figures():
+    """The paper's own 2D setting (Figures 1-4): clustered observations on
+    an 8-subdomain 2D tiling, re-balanced to the average load."""
+    from repro.core import dydd2d
+    import time
+    obs = dydd2d.make_observations_2d(2000, kind="clustered", seed=0)
+    t0 = time.perf_counter()
+    res = dydd2d.dydd_2d(obs, pr=2, pc=4)
+    t = time.perf_counter() - t0
+    print(f"  2D (2x4): l_in={res.loads_initial.reshape(-1)} ->"
+          f" l_fin={res.loads_final.reshape(-1)}"
+          f" E={res.efficiency:.3f} ({t*1e3:.1f} ms)")
+    return res
+
+
+if __name__ == "__main__":
+    print("[MoE expert balance]")
+    moe_expert_balance()
+    print("[Loader balance]")
+    loader_balance()
+    print("[Scheduling scalability]")
+    scheduling_scalability()

@@ -1,0 +1,93 @@
+"""Roofline table: reads the dry-run artifacts (results/dryrun_*.json) and
+prints the per-(arch x shape) three-term analysis — deliverable (g)."""
+from __future__ import annotations
+
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def load(multi_pod=False):
+    name = "dryrun_multipod.json" if multi_pod else "dryrun_singlepod.json"
+    path = os.path.join(RESULTS, name)
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def print_table(rows=None, multi_pod=False):
+    data = rows or load(multi_pod)
+    if not data:
+        print("(no dry-run results yet — run repro.launch.dryrun)")
+        return []
+    hdr = (f"{'arch':22s} {'shape':12s} {'comp_ms':>9s} {'mem_ms':>9s} "
+           f"{'coll_ms':>9s} {'bound':>10s} {'useful':>7s} {'roofl':>6s} "
+           f"{'peakGiB':>8s}")
+    print(hdr)
+    print("-" * len(hdr))
+    out = []
+    for key in sorted(data):
+        r = data[key]
+        if r.get("status") == "skipped":
+            arch, shape = key.split("|")
+            print(f"{arch:22s} {shape:12s} {'—':>9s} {'—':>9s} {'—':>9s} "
+                  f"{'skipped':>10s}")
+            continue
+        if r.get("status") != "ok":
+            continue
+        peak = r.get("memory", {}).get("peak_per_device", 0) / 2**30
+        print(f"{r['arch']:22s} {r['shape']:12s} "
+              f"{r['compute_s']*1e3:9.2f} {r['memory_s']*1e3:9.2f} "
+              f"{r['collective_s']*1e3:9.2f} {r['dominant']:>10s} "
+              f"{r['useful_flops_frac']:7.3f} {r['roofline_frac']:6.3f} "
+              f"{peak:8.2f}")
+        out.append(r)
+    return out
+
+
+LEVERS = {
+    # dominant term -> the established lever family (EXPERIMENTS.md §Perf)
+    "compute": "already compute-bound: raise MXU utilization via larger "
+               "per-device batch or fewer remat recomputes",
+    "memory": "attention-score traffic / remat reads: Pallas flash kernel "
+              "on TPU, larger fusion scope, bf16 intermediates",
+    "collective": "sharding-level: EP for MoE grads (PERF-A2/C1), dp "
+                  "profile for small-d archs (PERF-B0), replicated embed "
+                  "(PERF-B3), microbatching",
+}
+
+
+def what_would_move(row) -> str:
+    d = row["dominant"]
+    base = LEVERS.get(d, "")
+    if row["shape"].startswith(("decode", "long")):
+        return ("serving regime: batch more requests per step; " + base)
+    return base
+
+
+def summarize():
+    data = load()
+    if not data:
+        return
+    ok = [r for r in data.values() if r.get("status") == "ok"]
+    from collections import Counter
+    doms = Counter(r["dominant"] for r in ok)
+    worst = sorted(ok, key=lambda r: r["roofline_frac"])[:3]
+    coll = sorted(ok, key=lambda r: -r["collective_s"])[:3]
+    print(f"\n{len(ok)} cells analyzed; bottleneck mix: {dict(doms)}")
+    print("worst roofline fraction:",
+          [(r["arch"], r["shape"], round(r["roofline_frac"], 3))
+           for r in worst])
+    print("most collective-bound:",
+          [(r["arch"], r["shape"], round(r["collective_s"] * 1e3, 1))
+           for r in coll])
+    print("\nlever per dominant term (details: EXPERIMENTS.md §Perf):")
+    for d in doms:
+        print(f"  {d}: {LEVERS[d]}")
+
+
+if __name__ == "__main__":
+    print_table()
+    summarize()

@@ -1,0 +1,66 @@
+"""The paper's §6 scenarios, end to end, with a moving observation network.
+
+Reproduces the structure of Examples 1-4 and then goes beyond the paper's
+static snapshot: the observation distribution DRIFTS over assimilation
+cycles (a moving sensor swarm) and DyDD re-balances each cycle — the
+configuration the paper's conclusion names as future work ("each subdomain
+to move independently with time").
+
+  PYTHONPATH=src python examples/dydd_assimilation.py
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core import cls, dd, ddkf, dydd  # noqa: E402
+
+
+def drifting_observations(m, cycle, n_cycles, seed=0):
+    """A cluster of sensors drifting from x=0.2 to x=0.8 over cycles."""
+    rng = np.random.default_rng(seed + cycle)
+    center = 0.2 + 0.6 * cycle / max(n_cycles - 1, 1)
+    obs = np.clip(center + 0.08 * rng.normal(size=m), 0, 0.999999)
+    return np.sort(obs)
+
+
+def main():
+    n, m, p, cycles = 512, 800, 8, 6
+    key = jax.random.PRNGKey(0)
+
+    print(f"{cycles} assimilation cycles, {m} drifting observations, "
+          f"p={p} subdomains\n")
+    print(f"{'cycle':>5s} {'E static':>9s} {'E DyDD':>8s} {'rounds':>6s} "
+          f"{'moved':>6s} {'error_DD-DA':>12s}")
+
+    boundaries = np.linspace(0, 1, p + 1)
+    for c in range(cycles):
+        obs = drifting_observations(m, c, cycles)
+        prob = cls.local_problem(key, n, obs)
+
+        static_counts = np.histogram(obs, bins=p, range=(0, 1))[0]
+        e_static = dydd.balance_ratio(static_counts)
+
+        # Dynamic re-decomposition: start from LAST cycle's boundaries
+        # (the paper's 'dynamic redefining of the DD').
+        res = dydd.dydd_1d(obs, p, boundaries=boundaries.copy())
+        boundaries = res.boundaries
+
+        dec = dd.decompose_1d(n, res.boundaries)
+        packed = ddkf.pack(prob, dec)
+        x_dd = ddkf.solve_vmapped(packed, iters=120)
+        err = float(jnp.linalg.norm(x_dd - cls.solve(prob)))
+
+        print(f"{c:5d} {e_static:9.3f} {res.efficiency:8.3f} "
+              f"{res.rounds:6d} {res.total_movement:6d} {err:12.2e}")
+        assert res.efficiency > 0.8
+        assert err < 1e-8
+
+    print("\nDyDD keeps every cycle balanced while the static DD would "
+          "have collapsed to E~0 (all sensors in one subdomain).")
+
+
+if __name__ == "__main__":
+    main()

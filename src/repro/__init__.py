@@ -1,0 +1,2 @@
+"""repro: DyDD dynamic domain decomposition framework in JAX."""
+__version__ = "1.0.0"

@@ -1,0 +1,3 @@
+"""Fault-tolerant checkpointing: atomic writes, async, elastic re-shard."""
+from repro.checkpoint.manager import (  # noqa: F401
+    CheckpointManager, save_pytree, restore_pytree)

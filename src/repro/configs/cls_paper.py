@@ -1,0 +1,40 @@
+"""The paper's own experimental configuration (§6 'DyDD set up').
+
+Omega subset R^2 (we use the 1D reduction for the reference stack — see
+DESIGN.md §3), mesh size n = 2048, m observations, p = 2..64 subdomains.
+The four validation examples correspond to the paper's Tables 1-12.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class CLSCase:
+    name: str
+    n: int                 # mesh size (paper: 2048)
+    m: int                 # observations
+    p: int                 # subdomains / processors
+    graph: str             # chain | star
+    empty_subdomains: tuple = ()
+    distribution: str = "beta"   # non-uniform sparse observations
+
+
+EXAMPLE1 = (
+    CLSCase("ex1_case1", 2048, 1500, 2, "chain"),
+    CLSCase("ex1_case2", 2048, 1500, 2, "chain", empty_subdomains=(1,)),
+)
+
+EXAMPLE2 = tuple(
+    CLSCase(f"ex2_case{k+1}", 2048, 1500, 4, "chain",
+            empty_subdomains=tuple(range(k)))
+    for k in range(4)
+)
+
+EXAMPLE3 = tuple(
+    CLSCase(f"ex3_p{p}", 2048, 1032, p, "star") for p in (2, 4, 8, 16, 32)
+)
+
+EXAMPLE4 = tuple(
+    CLSCase(f"ex4_p{p}", 2048, 2000, p, "chain") for p in (2, 4, 8, 16, 32)
+)

@@ -1,0 +1,98 @@
+"""Input-shape registry: the 4 assigned shapes x 10 archs = 40 cells.
+
+  train_4k     seq 4096,   global_batch 256   -> train_step
+  prefill_32k  seq 32768,  global_batch 32    -> prefill step
+  decode_32k   seq 32768,  global_batch 128   -> serve_step (1 new token,
+                                                 KV cache of seq_len)
+  long_500k    seq 524288, global_batch 1     -> serve_step; run only for
+                                                 sub-quadratic-cache archs
+                                                 (see DESIGN.md §5)
+
+``input_specs`` returns jax.ShapeDtypeStruct stand-ins (weak-type correct,
+shardable, zero allocation) for every model input of a given (arch, shape)
+cell — the pattern the multi-pod dry-run lowers against.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCase:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str          # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeCase("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCase("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCase("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCase("long_500k", 524288, 1, "decode"),
+}
+
+# Pure full-attention archs skip long_500k (unbounded KV cache; DESIGN.md
+# §5).  whisper skips it because the enc-dec family has no 500k decode
+# state (decoder context <= 448 architecturally).
+LONG_CONTEXT_OK = {
+    "recurrentgemma-9b", "mamba2-1.3b", "mixtral-8x22b", "gemma3-1b",
+}
+
+
+def cell_supported(cfg: ModelConfig, shape: str) -> tuple:
+    """(supported, reason)."""
+    if shape == "long_500k" and cfg.name not in LONG_CONTEXT_OK:
+        return False, ("pure full-attention (or bounded enc-dec) arch: "
+                       "unbounded 500k KV cache excluded per DESIGN.md §5")
+    return True, ""
+
+
+def _token_struct(b, s):
+    return jax.ShapeDtypeStruct((b, s), jnp.int32)
+
+
+def input_specs(cfg: ModelConfig, shape: str) -> dict:
+    """ShapeDtypeStruct stand-ins for every input of this (arch, shape).
+
+    train  -> {"tokens", "labels", "mask"} (+ modality stubs)
+    prefill-> {"tokens"} (+ modality stubs)
+    decode -> {"tokens" (B,1)}; the KV cache comes from
+              ``decode_cache_specs``.
+    """
+    case = SHAPES[shape]
+    B, S = case.global_batch, case.seq_len
+    dt = jnp.dtype(cfg.dtype)
+
+    extras = {}
+    if cfg.frontend == "audio_stub":
+        extras["frames"] = jax.ShapeDtypeStruct(
+            (B, cfg.encoder_seq, cfg.d_model), dt)
+    if cfg.frontend == "vision_stub" and case.kind != "decode":
+        extras["patches"] = jax.ShapeDtypeStruct(
+            (B, cfg.num_patches, cfg.d_model), dt)
+
+    if case.kind == "train":
+        return {"tokens": _token_struct(B, S),
+                "labels": _token_struct(B, S),
+                "mask": jax.ShapeDtypeStruct((B, S), jnp.float32),
+                **extras}
+    if case.kind == "prefill":
+        return {"tokens": _token_struct(B, S), **extras}
+    # decode: one new token against a cache of length S
+    return {"tokens": _token_struct(B, 1), **extras}
+
+
+def decode_cache_specs(cfg: ModelConfig, shape: str):
+    """ShapeDtypeStructs of the decode cache for this cell (no alloc)."""
+    from repro.models import transformer
+    case = SHAPES[shape]
+    cache = jax.eval_shape(
+        lambda: transformer.init_decode_cache(cfg, case.global_batch,
+                                              case.seq_len))
+    return cache

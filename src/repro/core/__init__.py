@@ -1,0 +1,2 @@
+"""Core paper library: CLS, Kalman Filter, DD-CLS, DyDD (1D/2D), DD-KF."""
+from repro.core import balance, cls, dd, ddkf, dydd, dydd2d, kalman  # noqa: F401

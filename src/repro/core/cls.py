@@ -1,0 +1,171 @@
+"""Constrained Least Squares (CLS) model — the paper's prototype DA problem.
+
+The CLS problem (paper §3.1) combines two overdetermined linear systems,
+
+    state:        H0 x = y0,   H0 in R^{m0 x n},  rank(H0) = n, m0 > n
+    observations: H1 x = y1,   H1 in R^{m1 x n},  m1 > 0
+
+into  S: A x = b  with  A = [H0; H1], b = [y0; y1] and weight
+R = diag(R0, R1).  The CLS estimate minimizes
+
+    J(x) = ||A x - b||_R^2 = ||H0 x - y0||_{R0}^2 + ||H1 x - y1||_{R1}^2
+
+and is given by the normal equations (eq. 18-19)
+
+    (A^T R A) x = A^T R b.
+
+Everything here is pure JAX and differentiable; shapes are static.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class CLSProblem:
+    """A CLS problem instance.
+
+    Attributes:
+      H0: (m0, n) state operator, full column rank.
+      y0: (m0,) state data.
+      H1: (m1, n) observation operator.
+      y1: (m1,) observation data.
+      R0: (m0,) diagonal of the state weight matrix (paper: R diagonal).
+      R1: (m1,) diagonal of the observation weight matrix.
+    """
+
+    H0: jax.Array
+    y0: jax.Array
+    H1: jax.Array
+    y1: jax.Array
+    R0: jax.Array
+    R1: jax.Array
+
+    @property
+    def n(self) -> int:
+        return self.H0.shape[1]
+
+    @property
+    def m0(self) -> int:
+        return self.H0.shape[0]
+
+    @property
+    def m1(self) -> int:
+        return self.H1.shape[0]
+
+    def stacked(self):
+        """Return (A, b, r) with A = [H0; H1], b = [y0; y1], r = diag(R)."""
+        A = jnp.concatenate([self.H0, self.H1], axis=0)
+        b = jnp.concatenate([self.y0, self.y1], axis=0)
+        r = jnp.concatenate([self.R0, self.R1], axis=0)
+        return A, b, r
+
+
+def objective(prob: CLSProblem, x: jax.Array) -> jax.Array:
+    """J(x) = ||H0 x - y0||_{R0}^2 + ||H1 x - y1||_{R1}^2  (eq. 17)."""
+    r0 = prob.H0 @ x - prob.y0
+    r1 = prob.H1 @ x - prob.y1
+    return jnp.sum(prob.R0 * r0 * r0) + jnp.sum(prob.R1 * r1 * r1)
+
+
+def normal_matrix(prob: CLSProblem) -> jax.Array:
+    """A^T R A = H0^T R0 H0 + H1^T R1 H1."""
+    return (prob.H0.T * prob.R0) @ prob.H0 + (prob.H1.T * prob.R1) @ prob.H1
+
+
+def normal_rhs(prob: CLSProblem) -> jax.Array:
+    """A^T R b = H0^T R0 y0 + H1^T R1 y1."""
+    return prob.H0.T @ (prob.R0 * prob.y0) + prob.H1.T @ (prob.R1 * prob.y1)
+
+
+@jax.jit
+def solve(prob: CLSProblem) -> jax.Array:
+    """Closed-form CLS solution via Cholesky on the normal equations (eq. 19).
+
+    A^T R A is SPD because rank(H0) = n and R > 0, so Cholesky is the
+    MXU-friendly solve (two triangular solves, no pivoting).
+    """
+    N = normal_matrix(prob)
+    c = normal_rhs(prob)
+    chol = jnp.linalg.cholesky(N)
+    z = jax.scipy.linalg.solve_triangular(chol, c, lower=True)
+    return jax.scipy.linalg.solve_triangular(chol.T, z, lower=False)
+
+
+@jax.jit
+def solve_cg(prob: CLSProblem, x0: jax.Array | None = None,
+             tol: float = 1e-10, maxiter: int = 2000) -> jax.Array:
+    """Matrix-free CG on the normal equations — used when n is large and
+    materializing A^T R A is undesirable."""
+    def matvec(x):
+        return (prob.H0.T @ (prob.R0 * (prob.H0 @ x))
+                + prob.H1.T @ (prob.R1 * (prob.H1 @ x)))
+
+    c = normal_rhs(prob)
+    x, _ = jax.scipy.sparse.linalg.cg(matvec, c, x0=x0, tol=tol,
+                                      maxiter=maxiter)
+    return x
+
+
+def local_problem(key: jax.Array, n: int, obs_locations,
+                  stencil: int = 3, dtype=jnp.float64,
+                  smooth: float = 0.25) -> CLSProblem:
+    """A spatially-local CLS instance mirroring the paper's PDE setting.
+
+    * State system H0: identity rows plus ``smooth``-weighted second-
+      difference rows (a discretized diffusion/background term) — banded,
+      m0 = 2n - 2 > n, rank n.
+    * Observation system H1: each observation at location ``obs_locations[k]
+      in [0,1)`` maps to a ``stencil``-point interpolation row around the
+      nearest mesh point — the row is *local to the subdomain containing the
+      observation*, which is what makes DyDD's row balancing meaningful.
+    """
+    import numpy as np
+    obs = np.asarray(obs_locations, dtype=np.float64)
+    m1 = obs.shape[0]
+    k1, k2 = jax.random.split(key)
+
+    eye = np.eye(n)
+    d2 = np.zeros((n - 2, n))
+    for i in range(n - 2):
+        d2[i, i:i + 3] = (-1.0, 2.0, -1.0)
+    H0 = np.concatenate([eye, smooth * d2], axis=0)
+
+    H1 = np.zeros((m1, n))
+    centers = np.clip((obs * n).astype(np.int64), 0, n - 1)
+    half = stencil // 2
+    for kk in range(m1):
+        lo = max(0, centers[kk] - half)
+        hi = min(n, centers[kk] + half + 1)
+        wts = np.exp(-0.5 * (np.arange(lo, hi) - obs[kk] * n) ** 2)
+        H1[kk, lo:hi] = wts / wts.sum()
+
+    x_true = jax.random.normal(k1, (n,), dtype)
+    noise = 1e-3 * jax.random.normal(k2, (H0.shape[0] + m1,), dtype)
+    H0 = jnp.asarray(H0, dtype)
+    H1 = jnp.asarray(H1, dtype)
+    y0 = H0 @ x_true + noise[:H0.shape[0]]
+    y1 = H1 @ x_true + noise[H0.shape[0]:]
+    return CLSProblem(H0=H0, y0=y0, H1=H1, y1=y1,
+                      R0=jnp.ones((H0.shape[0],), dtype),
+                      R1=jnp.ones((m1,), dtype))
+
+
+def random_problem(key: jax.Array, n: int, m0: int, m1: int,
+                   dtype=jnp.float64) -> CLSProblem:
+    """A random well-conditioned CLS instance (used by tests/benchmarks)."""
+    k0, k1, k2, k3 = jax.random.split(key, 4)
+    H0 = jax.random.normal(k0, (m0, n), dtype) + jnp.eye(m0, n, dtype=dtype)
+    H1 = jax.random.normal(k1, (m1, n), dtype)
+    x_true = jax.random.normal(k2, (n,), dtype)
+    noise = 1e-3 * jax.random.normal(k3, (m0 + m1,), dtype)
+    y0 = H0 @ x_true + noise[:m0]
+    y1 = H1 @ x_true + noise[m0:]
+    R0 = jnp.ones((m0,), dtype)
+    R1 = jnp.ones((m1,), dtype)
+    return CLSProblem(H0=H0, y0=y0, H1=H1, y1=y1, R0=R0, R1=R1)

@@ -1,0 +1,229 @@
+"""DD-KF — the distributed Kalman-Filter solve of a decomposed CLS problem.
+
+Each subdomain (= processor) iterates the *additive* Schwarz update of
+``repro.core.dd``: given the current global iterate, it solves its local
+regularized VAR-KF problem (eq. 25/27) and the updates are assembled
+(eq. 28).  The only inter-processor communication per iteration is
+
+    Ax = sum_j A_j x_j            (one all-reduce of an m-vector)
+
+plus the boundary/overlap exchange folded into the assembly — exactly the
+communication structure the paper counts in its overhead T^p_oh.
+
+Two execution paths share the same step function:
+  * ``solve_vmapped``   — subdomains on the leading axis of a batch
+                          (single-device correctness/reference path);
+  * ``solve_shardmap``  — subdomains sharded over a mesh axis with
+                          ``jax.lax.psum`` (the production path; exercised
+                          under forced multi-device XLA in tests and by the
+                          launch dry-run).
+
+Static shapes: local blocks are padded to the max block width; padded
+columns carry an identity diagonal in the local normal matrix and zero
+right-hand side, so their solution stays exactly zero.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import cls as cls_mod
+from repro.core import dd as dd_mod
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=("A_loc", "L_loc", "cols", "mask", "muov", "wdiv",
+                      "mult", "r", "b"),
+         meta_fields=("n", "p", "w"))
+@dataclasses.dataclass(frozen=True)
+class PackedDD:
+    """Host-side packing of a Decomposition into padded device arrays."""
+
+    A_loc: jax.Array      # (p, m, w) local column blocks, zero-padded
+    L_loc: jax.Array      # (p, w, w) Cholesky of local normal matrices
+    cols: jax.Array       # (p, w) global column index per local slot (or -1)
+    mask: jax.Array       # (p, w) 1.0 for real columns, 0.0 for padding
+    muov: jax.Array       # (p, w) mu on overlap slots (regularization)
+    wdiv: jax.Array       # (p, w) mask / column-multiplicity: partition of
+                          # unity so sum_i A_i (x_i * wdiv_i) == A x_glob
+    mult: jax.Array       # (n,) column multiplicity (overlap counting)
+    r: jax.Array          # (m,) weight diagonal
+    b: jax.Array          # (m,) stacked data
+    n: int
+    p: int
+    w: int
+
+
+def pack(prob: cls_mod.CLSProblem, dec: dd_mod.Decomposition,
+         mu: float = 1.0) -> PackedDD:
+    A = jnp.concatenate([prob.H0, prob.H1], axis=0)
+    r = jnp.concatenate([prob.R0, prob.R1])
+    b = jnp.concatenate([prob.y0, prob.y1])
+    m, n = A.shape
+    p = dec.p
+    w = max(int(np.asarray(c).shape[0]) for c in dec.col_sets)
+
+    counts = np.zeros(n, dtype=np.int64)
+    for c in dec.col_sets:
+        counts[np.asarray(c)] += 1
+
+    A_loc = np.zeros((p, m, w), dtype=np.asarray(A).dtype)
+    L_loc = np.zeros((p, w, w), dtype=np.asarray(A).dtype)
+    cols = -np.ones((p, w), dtype=np.int64)
+    mask = np.zeros((p, w), dtype=np.asarray(A).dtype)
+    muov = np.zeros((p, w), dtype=np.asarray(A).dtype)
+    A_np = np.asarray(A)
+    r_np = np.asarray(r)
+    for i, c in enumerate(dec.col_sets):
+        c = np.asarray(c)
+        k = c.shape[0]
+        A_loc[i, :, :k] = A_np[:, c]
+        cols[i, :k] = c
+        mask[i, :k] = 1.0
+        N = (A_loc[i].T * r_np) @ A_loc[i]
+        if dec.overlap > 0 and mu > 0.0:
+            ov = (counts[c] > 1).astype(N.dtype)
+            muov[i, :k] = mu * ov
+            N[:k, :k] += mu * np.diag(ov)
+        # Identity on padded slots keeps the factor nonsingular.
+        pad = np.arange(k, w)
+        N[pad, pad] = 1.0
+        L_loc[i] = np.linalg.cholesky(N)
+    mult_at = np.maximum(counts, 1)[np.clip(cols, 0, n - 1)]
+    wdiv = mask / mult_at
+    return PackedDD(A_loc=jnp.asarray(A_loc), L_loc=jnp.asarray(L_loc),
+                    cols=jnp.asarray(cols), mask=jnp.asarray(mask),
+                    muov=jnp.asarray(muov), wdiv=jnp.asarray(wdiv),
+                    mult=jnp.asarray(np.maximum(counts, 1)).astype(A.dtype),
+                    r=r, b=b, n=n, p=p, w=w)
+
+
+def _chol_solve(L, rhs):
+    z = jax.scipy.linalg.solve_triangular(L, rhs, lower=True)
+    return jax.scipy.linalg.solve_triangular(L.T, z, lower=False)
+
+
+def _local_update(A_i, L_i, mask_i, muov_i, x_i, Ax, r, b):
+    """One local regularized VAR-KF solve given the global product Ax
+    (eq. 25/27): the mu-term anchors the overlap slots to the current
+    consistent global iterate x_i (= x_glob gathered)."""
+    resid = b - Ax + A_i @ x_i
+    rhs = (A_i.T @ (r * resid) + muov_i * x_i) * mask_i
+    return _chol_solve(L_i, rhs) * mask_i
+
+
+# ---------------------------------------------------------------------------
+# Reference path: subdomains on a batch axis.
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("iters",))
+def solve_vmapped(packed: PackedDD, iters: int = 60,
+                  damping: float = 1.0) -> jax.Array:
+    """Additive-Schwarz DD-KF; returns the assembled global estimate."""
+
+    def body(_, x_loc):
+        # partition of unity: overlap columns contribute once to A x_glob
+        Ax_parts = jnp.einsum("pmw,pw->pm", packed.A_loc,
+                              x_loc * packed.wdiv)
+        Ax = jnp.sum(Ax_parts, axis=0)
+        new = jax.vmap(
+            lambda A_i, L_i, m_i, mu_i, x_i: _local_update(
+                A_i, L_i, m_i, mu_i, x_i, Ax, packed.r, packed.b)
+        )(packed.A_loc, packed.L_loc, packed.mask, packed.muov, x_loc)
+        x_loc2 = (1.0 - damping) * x_loc + damping * new
+        # Overlap consistency: average duplicated columns globally, then
+        # gather back (eq. 28).
+        x_glob = assemble(packed, x_loc2)
+        return gather_local(packed, x_glob)
+
+    x0 = jnp.zeros((packed.p, packed.w), dtype=packed.A_loc.dtype)
+    x_loc = jax.lax.fori_loop(0, iters, body, x0)
+    return assemble(packed, x_loc)
+
+
+def assemble(packed: PackedDD, x_loc: jax.Array) -> jax.Array:
+    """Scatter local iterates into the global vector, averaging overlaps."""
+    flat_cols = jnp.where(packed.cols >= 0, packed.cols, packed.n)
+    acc = jnp.zeros((packed.n + 1,), dtype=x_loc.dtype)
+    acc = acc.at[flat_cols.reshape(-1)].add(
+        (x_loc * packed.mask).reshape(-1))
+    return acc[:packed.n] / packed.mult
+
+
+def gather_local(packed: PackedDD, x_glob: jax.Array) -> jax.Array:
+    safe = jnp.where(packed.cols >= 0, packed.cols, 0)
+    return x_glob[safe] * packed.mask
+
+
+# ---------------------------------------------------------------------------
+# Production path: subdomains sharded over a mesh axis.
+# ---------------------------------------------------------------------------
+
+def solve_shardmap(packed: PackedDD, mesh, axis: str = "sub",
+                   iters: int = 60, damping: float = 1.0) -> jax.Array:
+    """Same iteration with one device per subdomain.
+
+    Per iteration the communication is one ``psum`` of the (m,) product —
+    the m-vector all-reduce the paper accounts as overhead — plus one
+    ``psum`` of the (n,) assembled estimate (the boundary exchange; for a
+    banded A this would specialize to neighbour ppermute, we keep the
+    general form).
+    """
+
+    def per_device(A_i, L_i, mask_i, muov_i, wdiv_i, cols_i):
+        # Leading axis of size 1 (= this device's subdomain).
+        A_i, L_i, mask_i, muov_i, wdiv_i, cols_i = (
+            A_i[0], L_i[0], mask_i[0], muov_i[0], wdiv_i[0], cols_i[0])
+
+        def body(_, x_i):
+            Ax = jax.lax.psum(A_i @ (x_i * wdiv_i), axis)
+            new = _local_update(A_i, L_i, mask_i, muov_i, x_i, Ax,
+                                packed.r, packed.b)
+            x_i2 = (1.0 - damping) * x_i + damping * new
+            # Global overlap averaging (psum-scatter of the n-vector).
+            safe = jnp.where(cols_i >= 0, cols_i, packed.n)
+            part = jnp.zeros((packed.n + 1,), x_i2.dtype
+                             ).at[safe].add(x_i2 * mask_i)
+            x_glob = jax.lax.psum(part[:packed.n], axis) / packed.mult
+            return x_glob[jnp.where(cols_i >= 0, cols_i, 0)] * mask_i
+
+        x_i = jnp.zeros((packed.w,), dtype=A_i.dtype)
+        x_i = jax.lax.fori_loop(0, iters, body, x_i)
+        safe = jnp.where(cols_i >= 0, cols_i, packed.n)
+        part = jnp.zeros((packed.n + 1,), x_i.dtype).at[safe].add(
+            x_i * mask_i)
+        return jax.lax.psum(part[:packed.n], axis)[None] / packed.mult
+
+    fn = jax.shard_map(
+        per_device, mesh=mesh,
+        in_specs=(P(axis), P(axis), P(axis), P(axis), P(axis), P(axis)),
+        out_specs=P(axis),
+        check_vma=False)
+    out = fn(packed.A_loc, packed.L_loc, packed.mask, packed.muov,
+             packed.wdiv, packed.cols)
+    return out[0]
+
+
+# ---------------------------------------------------------------------------
+# Convenience driver: DyDD + DD-KF end to end on a 1D domain.
+# ---------------------------------------------------------------------------
+
+def ddkf_with_dydd(prob: cls_mod.CLSProblem, obs_locations: np.ndarray,
+                   p: int, overlap: int = 0, iters: int = 60,
+                   mu: float = 1.0):
+    """Balance observations with DyDD, decompose, and solve with DD-KF.
+
+    Returns (x_ddkf, dydd_result, decomposition).
+    """
+    from repro.core import dydd as dydd_mod
+
+    res = dydd_mod.dydd_1d(obs_locations, p)
+    dec = dd_mod.decompose_1d(prob.n, res.boundaries, overlap=overlap)
+    packed = pack(prob, dec, mu=mu)
+    x = solve_vmapped(packed, iters=iters)
+    return x, res, dec

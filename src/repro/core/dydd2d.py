@@ -1,0 +1,131 @@
+"""DyDD on a 2D domain — the paper's actual setting (Ω ⊂ R², Figures 1-4).
+
+Decomposition is a *shelf* tiling: `pr` horizontal strips whose y-edges can
+shift, each strip split into `pc` cells whose x-edges shift independently
+per strip.  This is exactly the boundary-shifting migration the paper
+draws: Figure 3 moves vertical edges between adjacent subdomains, Figure 1
+splits an overloaded neighbour of an empty cell — both are 1D migrations
+applied per axis.
+
+Balancing is two nested applications of the 1D machinery:
+  1. y-pass: strip loads → ``migrate_1d`` on the y-edges (chain graph of
+     strips),
+  2. x-pass: within each strip, cell loads → ``migrate_1d`` on that
+     strip's x-edges.
+Both passes move observations only between *adjacent* subdomains (the
+diffusion restriction), and the processor graph of the tiling is the
+pr × pc grid — ``dydd.grid_edges`` — on which the scheduling step is also
+validated (tests assert the geometric result matches the graph schedule's
+balance floor).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import dydd
+
+
+@dataclasses.dataclass
+class DyDD2DResult:
+    y_edges: np.ndarray          # (pr+1,)
+    x_edges: np.ndarray          # (pr, pc+1)
+    loads_initial: np.ndarray    # (pr, pc)
+    loads_final: np.ndarray     # (pr, pc)
+    total_movement: int
+
+    @property
+    def efficiency(self) -> float:
+        return dydd.balance_ratio(self.loads_final.reshape(-1))
+
+
+def _counts_2d(obs: np.ndarray, y_edges: np.ndarray,
+               x_edges: np.ndarray) -> np.ndarray:
+    pr = len(y_edges) - 1
+    pc = x_edges.shape[1] - 1
+    counts = np.zeros((pr, pc), np.int64)
+    rows = np.clip(np.searchsorted(y_edges, obs[:, 1], side="right") - 1,
+                   0, pr - 1)
+    for r in range(pr):
+        xs = obs[rows == r, 0]
+        cols = np.clip(np.searchsorted(x_edges[r], xs, side="right") - 1,
+                       0, pc - 1)
+        counts[r] = np.bincount(cols, minlength=pc)
+    return counts
+
+
+def dydd_2d(obs: np.ndarray, pr: int, pc: int,
+            max_rounds: int = 64) -> DyDD2DResult:
+    """Balance m observations (m, 2) in [0,1)² over a pr x pc tiling.
+
+    Returns shifted shelf boundaries with every cell's load within integer
+    rounding of m/(pr·pc).
+    """
+    obs = np.asarray(obs, dtype=np.float64)
+    assert obs.ndim == 2 and obs.shape[1] == 2
+    m = obs.shape[0]
+
+    y_edges0 = np.linspace(0.0, 1.0, pr + 1)
+    x_edges0 = np.tile(np.linspace(0.0, 1.0, pc + 1), (pr, 1))
+    l_in = _counts_2d(obs, y_edges0, x_edges0)
+
+    # --- y-pass: balance strip loads via 1D migration on y ---------------
+    strip_target = np.array([m // pr + (1 if i < m % pr else 0)
+                             for i in range(pr)], np.int64)
+    y_edges = dydd.migrate_1d(obs[:, 1], y_edges0.copy(), strip_target)
+
+    # --- x-pass: per strip, balance cell loads on x -----------------------
+    x_edges = np.empty((pr, pc + 1))
+    rows = np.clip(np.searchsorted(y_edges, obs[:, 1], side="right") - 1,
+                   0, pr - 1)
+    for r in range(pr):
+        xs = np.sort(obs[rows == r, 0])
+        k = xs.shape[0]
+        cell_target = np.array([k // pc + (1 if j < k % pc else 0)
+                                for j in range(pc)], np.int64)
+        x_edges[r] = dydd.migrate_1d(xs, np.linspace(0, 1, pc + 1),
+                                     cell_target)
+
+    l_fin = _counts_2d(obs, y_edges, x_edges)
+    moved = int(np.abs(l_fin - l_in).sum() // 2)
+    return DyDD2DResult(y_edges=y_edges, x_edges=x_edges,
+                        loads_initial=l_in, loads_final=l_fin,
+                        total_movement=moved)
+
+
+def make_observations_2d(m: int, kind: str = "clustered",
+                         seed: int = 0) -> np.ndarray:
+    """2D observation locations: uniform / beta-skewed / clustered."""
+    rng = np.random.default_rng(seed)
+    if kind == "uniform":
+        return rng.uniform(0, 1, (m, 2))
+    if kind == "beta":
+        return np.stack([rng.beta(2, 5, m), rng.beta(5, 2, m)], axis=1)
+    centers = rng.uniform(0.15, 0.85, (3, 2))
+    c = rng.integers(0, 3, m)
+    pts = centers[c] + 0.06 * rng.normal(size=(m, 2))
+    return np.clip(pts, 0, 0.999999)
+
+
+def cell_col_sets(nx: int, ny: int, y_edges: np.ndarray,
+                  x_edges: np.ndarray):
+    """Map a raster-ordered nx x ny mesh onto the tiling: the 2D analogue
+    of ``dd.decompose_1d`` (Remark 4's I x J decomposition).  Returns a
+    list of pr*pc int arrays of global column indices."""
+    xs = (np.arange(nx) + 0.5) / nx
+    ys = (np.arange(ny) + 0.5) / ny
+    pr = len(y_edges) - 1
+    pc = x_edges.shape[1] - 1
+    out = []
+    gx, gy = np.meshgrid(xs, ys)              # (ny, nx)
+    flat_x, flat_y = gx.reshape(-1), gy.reshape(-1)
+    rows = np.clip(np.searchsorted(y_edges, flat_y, side="right") - 1, 0,
+                   pr - 1)
+    for r in range(pr):
+        cols = np.clip(np.searchsorted(x_edges[r], flat_x,
+                                       side="right") - 1, 0, pc - 1)
+        for cidx in range(pc):
+            sel = np.where((rows == r) & (cols == cidx))[0]
+            out.append(sel.astype(np.int64))
+    return out

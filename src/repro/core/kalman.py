@@ -1,0 +1,109 @@
+"""Kalman Filter and its variational (VAR-KF) form — paper §2.
+
+Implements the textbook KF (eqs. 5-8) plus the sequential VAR-KF solver for
+CLS problems used as the reference ("KF solving CLS problem", paper §6): the
+observation rows of H1 are assimilated one block at a time starting from the
+state system H0 x = y0, so the final estimate equals the CLS solution.
+This is the sequential baseline that DD-KF is validated against
+(error_DD-DA ~ 1e-11 in the paper).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import cls as cls_mod
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class KFState:
+    """Filter state: estimate and covariance (information is kept dense —
+    the paper's CLS case study has Q = 0 and diagonal R, §3 remark)."""
+
+    x: jax.Array  # (n,) state estimate
+    P: jax.Array  # (n, n) error covariance
+
+
+def predict(state: KFState, M: jax.Array, Q: jax.Array) -> KFState:
+    """Predictor phase (eqs. 5-6): x <- M x, P <- M P M^T + Q."""
+    x = M @ state.x
+    P = M @ state.P @ M.T + Q
+    return KFState(x=x, P=P)
+
+
+def correct(state: KFState, H: jax.Array, y: jax.Array,
+            R: jax.Array) -> KFState:
+    """Corrector phase (eqs. 7-8).
+
+    K = P H^T (H P H^T + R)^-1 ; x <- x + K (y - H x) ; P <- (I - K H) P.
+    R is the (m,) diagonal of the observation covariance.
+    """
+    HP = H @ state.P                                  # (m, n)
+    S = HP @ H.T + jnp.diag(R)
+    # Solve instead of explicit inverse: K = P H^T S^-1 = (S^-1 H P)^T.
+    K = jax.scipy.linalg.solve(S, HP, assume_a="pos").T
+    x = state.x + K @ (y - H @ state.x)
+    # (I - K H) P = P - K (H P): O(n^2 m) instead of O(n^3).
+    P = state.P - K @ HP
+    return KFState(x=x, P=P)
+
+
+def run(x0: jax.Array, P0: jax.Array,
+        Ms: jax.Array, Qs: jax.Array,
+        Hs: jax.Array, ys: jax.Array, Rs: jax.Array) -> KFState:
+    """Run r KF steps with jax.lax.scan.
+
+    Ms: (r, n, n), Qs: (r, n, n), Hs: (r, m, n), ys: (r, m), Rs: (r, m).
+    """
+    def step(state: KFState, inp):
+        M, Q, H, y, R = inp
+        state = predict(state, M, Q)
+        state = correct(state, H, y, R)
+        return state, state.x
+
+    init = KFState(x=x0, P=P0)
+    final, xs = jax.lax.scan(step, init, (Ms, Qs, Hs, ys, Rs))
+    return final, xs
+
+
+# ---------------------------------------------------------------------------
+# VAR-KF on a CLS problem: the paper's sequential reference method.
+# ---------------------------------------------------------------------------
+
+def _info_init(prob: cls_mod.CLSProblem):
+    """Initialize from the state system H0 x = y0 (information form).
+
+    Since rank(H0) = n, the GLS solution of the state system alone is
+    x = (H0^T R0 H0)^-1 H0^T R0 y0 with covariance P = (H0^T R0 H0)^-1.
+    """
+    N = (prob.H0.T * prob.R0) @ prob.H0
+    P = jnp.linalg.inv(N)
+    x = P @ (prob.H0.T @ (prob.R0 * prob.y0))
+    return KFState(x=x, P=P)
+
+
+def solve_cls_sequential(prob: cls_mod.CLSProblem,
+                         block: int = 1) -> jax.Array:
+    """Assimilate the m1 observation rows sequentially (KF corrector steps,
+    M = I, Q = 0) — 'KF procedure on CLS problem' of paper §6.
+
+    The result equals the direct CLS solve up to roundoff; tests assert this.
+    ``block`` rows are assimilated per corrector step (m1 % block == 0).
+    """
+    m1 = prob.H1.shape[0]
+    assert m1 % block == 0, (m1, block)
+    state = _info_init(prob)
+    H_blocks = prob.H1.reshape(m1 // block, block, prob.n)
+    y_blocks = prob.y1.reshape(m1 // block, block)
+    R_blocks = prob.R1.reshape(m1 // block, block)
+
+    def step(st: KFState, inp):
+        H, y, R = inp
+        return correct(st, H, y, R), None
+
+    final, _ = jax.lax.scan(step, state, (H_blocks, y_blocks, R_blocks))
+    return final.x

@@ -1,0 +1,4 @@
+"""Data pipeline: synthetic corpora, packing, DyDD-balanced sharding."""
+from repro.data.pipeline import (  # noqa: F401
+    Document, synthetic_corpus, pack_documents, BalancedLoader)
+from repro.data.observations import make_observations  # noqa: F401

@@ -1,0 +1,2 @@
+"""Pallas TPU kernels + jnp oracles.  See EXAMPLE.md for the layout."""
+from repro.kernels import ops, ref  # noqa: F401

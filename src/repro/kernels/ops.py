@@ -1,0 +1,72 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On TPU backends the Pallas kernels run natively; elsewhere (this CPU
+container, and any backend without Mosaic) the wrappers either run the
+kernels in interpret mode (tests) or fall back to the jnp references —
+selected by ``mode``:
+
+  "auto"      — kernel on TPU, reference otherwise (production default)
+  "kernel"    — force the Pallas kernel (native)
+  "interpret" — force the Pallas kernel in interpret mode (CPU validation)
+  "ref"       — force the jnp oracle
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import ref as _ref
+from repro.kernels import gram as _gram
+from repro.kernels import rglru_scan as _rg
+from repro.kernels import ssd_scan as _ssd
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _resolve(mode: str) -> str:
+    if mode == "auto":
+        return "kernel" if _on_tpu() else "ref"
+    return mode
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    mode: str = "auto", block_q: int = 128,
+                    block_k: int = 128):
+    """q, k, v: (BH, S, D) -> (BH, S, D)."""
+    m = _resolve(mode)
+    if m == "ref":
+        return _ref.attention_ref(q, k, v, causal=causal, window=window)
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               block_q=block_q, block_k=block_k,
+                               interpret=(m == "interpret"))
+
+
+def rglru_scan(a, b, *, mode: str = "auto", block_s: int = 256,
+               block_w: int = 128):
+    """h_t = a_t h_{t-1} + b_t; a, b: (B, S, W)."""
+    m = _resolve(mode)
+    if m == "ref":
+        return _ref.rglru_scan_ref(a, b)
+    return _rg.rglru_scan(a, b, block_s=block_s, block_w=block_w,
+                          interpret=(m == "interpret"))
+
+
+def ssd_scan(x, dt, A, B, C, *, chunk: int = 256, mode: str = "auto"):
+    """Head-folded SSD: x (BH,S,P), dt (BH,S), A (BH,), B/C (BH,S,N)."""
+    m = _resolve(mode)
+    if m == "ref":
+        return _ref.ssd_heads_ref(x, dt, A, B, C, chunk)
+    return _ssd.ssd_scan(x, dt, A, B, C, chunk=chunk,
+                         interpret=(m == "interpret"))
+
+
+def gram(A, r, *, mode: str = "auto", block_m: int = 256):
+    """Batched weighted Gram N = A^T diag(r) A — the DD-KF normal-matrix
+    assembly hot spot (paper eq. 27)."""
+    m = _resolve(mode)
+    if m == "ref":
+        return _ref.gram_ref(A, r)
+    return _gram.gram(A, r, block_m=block_m, interpret=(m == "interpret"))

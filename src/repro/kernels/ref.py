@@ -1,0 +1,73 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q, k, v: (BH, S, D) -> (BH, S, D).  Naive softmax attention."""
+    bh, s, d = q.shape
+    scale = 1.0 / math.sqrt(d)
+    scores = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(s)[None, :]
+    ok = jnp.ones((s, s), bool)
+    if causal:
+        ok &= kpos <= qpos
+    if window > 0:
+        ok &= kpos > qpos - window
+    scores = jnp.where(ok[None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", probs,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def rglru_scan_ref(a, b):
+    """h_t = a_t * h_{t-1} + b_t via associative scan.  a, b: (B, S, W)."""
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, br + ar * bl
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def ssd_ref(x, dt, A, B, C, chunk: int):
+    """Mamba-2 SSD oracle — defers to the model's reference implementation
+    (one source of truth)."""
+    from repro.models.ssd import ssd_ref as _ref
+    return _ref(x, dt, A, B, C, chunk)
+
+
+def ssd_heads_ref(x, dt, A, B, C, chunk: int):
+    """Head-folded layout oracle matching the kernel's (BH, S, ...) layout.
+
+    x: (BH, S, P), dt: (BH, S), A: (BH,), B, C: (BH, S, N).
+    Sequential recurrence (exact):  S_t = exp(dt_t A) S_{t-1}
+    + dt_t B_t x_t^T ;  y_t = C_t S_t.
+    """
+    bh, s, p = x.shape
+    n = B.shape[-1]
+
+    def per_bh(xb, dtb, Ab, Bb, Cb):
+        def step(state, inp):
+            xt, dtt, Bt, Ct = inp
+            decay = jnp.exp(dtt * Ab)
+            state = decay * state + dtt * Bt[:, None] * xt[None, :]
+            return state, Ct @ state
+
+        init = jnp.zeros((n, p), jnp.float32)
+        _, y = jax.lax.scan(step, init, (xb, dtb, Bb, Cb))
+        return y
+
+    return jax.vmap(per_bh)(x, dt, A, B, C)
+
+
+def gram_ref(A, r):
+    """N = A^T diag(r) A, batched.  A: (p, m, w), r: (p, m)."""
+    return jnp.einsum("pmw,pm,pmv->pwv", A, r, A)

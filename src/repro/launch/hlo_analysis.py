@@ -1,0 +1,184 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+compute term    = HLO_FLOPs / (chips * peak_FLOPs)
+memory term     = HLO_bytes / (chips * HBM_bw)
+collective term = collective_bytes / (chips * link_bw)
+
+cost_analysis() reports *global* FLOPs/bytes (summed over partitions) for a
+SPMD module; collective bytes are NOT in cost_analysis, so we parse the
+partitioned HLO: after GSPMD, shapes are per-device, so summing the result
+bytes of every collective op gives per-device wire bytes
+(collective_bytes := per_device_bytes * chips, making the term
+per_device_bytes / link_bw).  all-reduce is counted twice (ring =
+reduce-scatter + all-gather at full payload); reduce-scatter at group_size x
+result (the payload that transits); all-gather/all-to-all/collective-permute
+at result size.
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+LINK_BW = 50e9               # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COLLECTIVE_RE = re.compile(
+    r"=\s*((?:\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^ ]*))\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_REPLICA_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_REPLICA_GROUPS_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _REPLICA_GROUPS_V2_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _REPLICA_GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 2
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    per_device_bytes: float
+    counts: dict
+    bytes_by_kind: dict
+
+
+def collective_bytes(hlo_text: str) -> CollectiveStats:
+    """Per-device wire bytes from a partitioned HLO module."""
+    counts: dict = {}
+    by_kind: dict = {}
+    total = 0.0
+    for line in hlo_text.splitlines():
+        m = _COLLECTIVE_RE.search(line)
+        if not m:
+            continue
+        type_str, op = m.group(1), m.group(2)
+        b = _shape_bytes(type_str)
+        g = _group_size(line)
+        if op == "all-reduce":
+            wire = 2.0 * b * (g - 1) / max(g, 1)
+        elif op == "reduce-scatter":
+            wire = b * (g - 1)           # input = b*g, transits (g-1)/g of it
+        elif op == "all-gather":
+            wire = b * (g - 1) / max(g, 1)
+        else:                            # all-to-all, collective-permute
+            wire = b
+        counts[op] = counts.get(op, 0) + 1
+        by_kind[op] = by_kind.get(op, 0.0) + wire
+        total += wire
+    return CollectiveStats(per_device_bytes=total, counts=counts,
+                           bytes_by_kind=by_kind)
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float                  # global HLO FLOPs
+    hbm_bytes: float              # global HLO bytes accessed
+    coll_bytes_per_device: float
+    chips: int
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops: float            # 6*N*D (or 6*N_active*D)
+    counts: dict
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_frac(self) -> float:
+        return self.model_flops / self.flops if self.flops else 0.0
+
+    @property
+    def roofline_frac(self) -> float:
+        """Fraction of the compute roofline realized if the dominant term
+        were fully overlapped: ideal_compute_time / bound_time."""
+        ideal = self.model_flops / (self.chips * PEAK_FLOPS)
+        return ideal / self.bound_s if self.bound_s else 0.0
+
+    def to_dict(self):
+        return {
+            "flops": self.flops, "hbm_bytes": self.hbm_bytes,
+            "coll_bytes_per_device": self.coll_bytes_per_device,
+            "chips": self.chips, "compute_s": self.compute_s,
+            "memory_s": self.memory_s, "collective_s": self.collective_s,
+            "model_flops": self.model_flops, "dominant": self.dominant,
+            "useful_flops_frac": self.useful_flops_frac,
+            "roofline_frac": self.roofline_frac, "counts": self.counts,
+        }
+
+
+def analyze(compiled, hlo_text: str, chips: int,
+            model_flops: float) -> Roofline:
+    """NOTE: XLA cost_analysis on a GSPMD-partitioned module reports
+    PER-DEVICE flops/bytes (verified against a hand-counted sharded matmul
+    — EXPERIMENTS.md §Dry-run methodology); we scale to global here."""
+    cost = compiled.cost_analysis()
+    flops = float(cost.get("flops", 0.0)) * chips
+    hbm = float(cost.get("bytes accessed", 0.0)) * chips
+    coll = collective_bytes(hlo_text)
+    return Roofline(
+        flops=flops, hbm_bytes=hbm,
+        coll_bytes_per_device=coll.per_device_bytes, chips=chips,
+        compute_s=flops / (chips * PEAK_FLOPS),
+        memory_s=hbm / (chips * HBM_BW),
+        collective_s=coll.per_device_bytes / LINK_BW,
+        model_flops=model_flops, counts=coll.counts)
+
+
+def model_flops_train(cfg, seq: int, global_batch: int) -> float:
+    """6*N*D with N = active params (MoE: routed experts only)."""
+    n_active = cfg.param_count(active_only=True)
+    return 6.0 * n_active * seq * global_batch
+
+
+def model_flops_decode(cfg, cache_len: int, global_batch: int) -> float:
+    """One token: 2*N_active matmul FLOPs + attention reads over the cache."""
+    n_active = cfg.param_count(active_only=True)
+    flops = 2.0 * n_active * global_batch
+    # attention over the cache (per global/local layer)
+    for i in range(cfg.num_layers):
+        t = cfg.layer_type(i)
+        if t in ("global", "local"):
+            span = cache_len if t == "global" else min(cfg.window, cache_len)
+            flops += (4.0 * global_batch * cfg.num_heads * cfg.head_dim
+                      * span)
+    return flops

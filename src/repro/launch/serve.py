@@ -1,0 +1,115 @@
+"""Serving driver: batched prefill + decode with static-shape KV caches.
+
+A minimal continuous-batching scheduler: requests arrive with different
+prompt lengths; prompts are left-padded into the prefill batch, decode
+proceeds lock-step with per-row stop handling.  On TPU the same loop runs
+under the production mesh with the cache shardings from
+``runtime.steps.make_serve_step`` (kv-head TP or cache sequence sharding).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.serve --arch gemma3-1b --smoke \
+      --batch 4 --prompt-len 32 --max-new 16
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.models import transformer
+from repro.runtime import steps as steps_mod
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray           # (len,) int32
+    max_new: int
+    out: list = dataclasses.field(default_factory=list)
+
+
+def serve_batch(cfg, params, requests, *, max_seq: int, greedy: bool = True,
+                seed: int = 0, mesh=None):
+    """Run a batch of requests to completion.  Returns the requests with
+    ``out`` filled, plus timing stats."""
+    B = len(requests)
+    S = max(len(r.prompt) for r in requests)
+    # right-align prompts (left padding) so decode positions line up
+    toks = np.zeros((B, S), np.int32)
+    for i, r in enumerate(requests):
+        toks[i, S - len(r.prompt):] = r.prompt
+    batch = {"tokens": jnp.asarray(toks)}
+    if cfg.frontend == "audio_stub":
+        batch["frames"] = jnp.zeros((B, cfg.encoder_seq, cfg.d_model),
+                                    jnp.dtype(cfg.dtype))
+    if cfg.frontend == "vision_stub":
+        batch["patches"] = jnp.zeros((B, cfg.num_patches, cfg.d_model),
+                                     jnp.dtype(cfg.dtype))
+    P_off = cfg.num_patches if cfg.frontend == "vision_stub" else 0
+
+    t0 = time.perf_counter()
+    prefill = steps_mod.make_prefill_step(cfg, max_seq=max_seq + P_off)
+    logits, cache = prefill(params, batch)
+    prefill_s = time.perf_counter() - t0
+
+    serve = steps_mod.make_serve_step(cfg, donate=False)
+    key = jax.random.PRNGKey(seed)
+    cur = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    max_new = max(r.max_new for r in requests)
+    t1 = time.perf_counter()
+    for step in range(max_new):
+        for i, r in enumerate(requests):
+            if step < r.max_new:
+                r.out.append(int(cur[i, 0]))
+        logits, cache = serve(params, cache, cur,
+                              jnp.asarray(P_off + S + step, jnp.int32))
+        if greedy:
+            cur = jnp.argmax(logits, -1).astype(jnp.int32)
+        else:
+            key, sub = jax.random.split(key)
+            cur = jax.random.categorical(sub, logits[:, 0, :])[:, None]
+            cur = cur.astype(jnp.int32)
+    decode_s = time.perf_counter() - t1
+    stats = {
+        "prefill_s": prefill_s,
+        "decode_s": decode_s,
+        "tokens_per_s": B * max_new / decode_s if decode_s else 0.0,
+    }
+    return requests, stats
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = (configs.get_smoke_config(args.arch) if args.smoke
+           else configs.get_config(args.arch))
+    params = transformer.init_params(cfg, jax.random.PRNGKey(args.seed))
+    rng = np.random.default_rng(args.seed)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(1, cfg.vocab_size,
+                                        rng.integers(4, args.prompt_len),
+                                        dtype=np.int64).astype(np.int32),
+                    max_new=args.max_new)
+            for i in range(args.batch)]
+    reqs, stats = serve_batch(cfg, params, reqs,
+                              max_seq=args.prompt_len + args.max_new)
+    for r in reqs:
+        print(f"req {r.rid}: prompt[{len(r.prompt)}] -> {r.out[:8]}...")
+    print(f"prefill {stats['prefill_s']:.3f}s decode {stats['decode_s']:.3f}s "
+          f"({stats['tokens_per_s']:.1f} tok/s)")
+
+
+if __name__ == "__main__":
+    main()

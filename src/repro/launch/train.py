@@ -1,0 +1,112 @@
+"""Production training driver.
+
+Wires every substrate together: config -> mesh -> DyDD-balanced data loader
+-> pjit train step -> straggler monitor -> async fault-tolerant checkpoints
+with auto-resume.  On this CPU container it runs the reduced (smoke)
+configs end-to-end (examples/train_lm.py drives it); on a TPU pod the same
+entry point runs the full configs (mesh from launch.mesh).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.train --arch gemma3-1b --smoke \
+      --steps 100 --seq 128 --batch 8 --ckpt-dir /tmp/run1
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.checkpoint import manager as ckpt_mod
+from repro.data import pipeline
+from repro.models import transformer
+from repro.optim import AdamWConfig, adamw_init, make_schedule
+from repro.runtime import steps as steps_mod
+from repro.runtime.straggler import StragglerMonitor
+
+
+def train(cfg, *, steps: int, seq: int, global_batch: int, dp: int,
+          ckpt_dir: str | None, ckpt_every: int = 50, lr: float = 3e-4,
+          seed: int = 0, log_every: int = 10, mesh=None):
+    opt_cfg = AdamWConfig(lr=lr)
+    schedule = make_schedule("cosine", lr, warmup_steps=max(steps // 20, 1),
+                             total_steps=steps)
+    step_fn = steps_mod.make_train_step(cfg, opt_cfg, lr_schedule=schedule,
+                                        mesh=mesh, donate=False)
+
+    loader = pipeline.BalancedLoader(
+        vocab_size=cfg.vocab_size, dp=dp,
+        batch_per_shard=global_batch // dp, seq=seq, seed=seed)
+
+    params = transformer.init_params(cfg, jax.random.PRNGKey(seed))
+    opt = adamw_init(params)
+    start_step = 0
+
+    mgr = None
+    if ckpt_dir:
+        mgr = ckpt_mod.CheckpointManager(ckpt_dir, keep=3)
+        restored = mgr.restore_latest(
+            like={"params": params, "opt": opt})
+        if restored is not None:
+            tree, manifest = restored
+            params, opt = tree["params"], tree["opt"]
+            loader.load_state_dict(manifest["metadata"]["loader"])
+            start_step = manifest["step"]
+            print(f"resumed from step {start_step}")
+
+    monitor = StragglerMonitor()
+    losses = []
+    for s in range(start_step, steps):
+        t, l, m = loader.next_batch()
+        batch = {"tokens": jnp.asarray(t), "labels": jnp.asarray(l),
+                 "mask": jnp.asarray(m)}
+        t0 = time.perf_counter()
+        loss, params, opt = step_fn(params, opt, batch)
+        loss = float(loss)
+        monitor.record(time.perf_counter() - t0)
+        losses.append(loss)
+        if s % log_every == 0 or s == steps - 1:
+            st = loader.last_stats
+            print(f"step {s:5d} loss {loss:8.4f} "
+                  f"balance E {st.efficiency_before:.3f}->"
+                  f"{st.efficiency_after:.3f} moved {st.docs_moved}")
+        if mgr and (s + 1) % ckpt_every == 0:
+            mgr.save({"params": params, "opt": opt}, step=s + 1,
+                     metadata={"loader": loader.state_dict()},
+                     blocking=False)
+    if mgr:
+        mgr.save({"params": params, "opt": opt}, step=steps,
+                 metadata={"loader": loader.state_dict()}, blocking=True)
+        mgr.wait()
+        mgr.close()
+    return params, opt, losses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-scale)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--dp", type=int, default=4)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = (configs.get_smoke_config(args.arch) if args.smoke
+           else configs.get_config(args.arch))
+    _, _, losses = train(cfg, steps=args.steps, seq=args.seq,
+                         global_batch=args.batch, dp=args.dp,
+                         ckpt_dir=args.ckpt_dir, lr=args.lr,
+                         seed=args.seed)
+    print(f"final loss {losses[-1]:.4f} (first {losses[0]:.4f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""Model stack: configs, layers and the flexible transformer."""
+from repro.models import attention, config, moe, nn, rglru, ssd, transformer  # noqa: F401
+from repro.models.config import ModelConfig  # noqa: F401

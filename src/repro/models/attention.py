@@ -1,0 +1,257 @@
+"""Attention: MHA/GQA/MQA, global + sliding-window, KV caches for decode.
+
+Training/prefill uses a blocked jnp implementation (the Pallas flash kernel
+in ``repro.kernels`` is numerically validated against the same reference and
+swaps in on real TPU backends via ``repro.kernels.ops``).  Decode uses a
+static-shape KV cache; sliding-window layers use a ring buffer of exactly
+``window`` slots so long-context decode state stays O(window), which is what
+makes the ``long_500k`` shape feasible for local/hybrid archs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import nn
+from repro.models.config import ModelConfig
+from repro.runtime import sharding
+
+NEG_INF = -1e30
+
+
+def make_attn_params(b: nn.Builder, cfg: ModelConfig):
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    return {
+        "wq": b.param((d, h, hd), ("embed", "heads", None)),
+        "wk": b.param((d, kv, hd), ("embed", "kv_heads", None)),
+        "wv": b.param((d, kv, hd), ("embed", "kv_heads", None)),
+        "wo": b.param((h, hd, d), ("heads", None, "embed")),
+    }
+
+
+def _expand_kv(k, q_per_kv):
+    """(B,S,KV,D) -> (B,S,KV*q_per_kv,D) by repeat (GQA)."""
+    if q_per_kv == 1:
+        return k
+    return jnp.repeat(k, q_per_kv, axis=2)
+
+
+def _mask(seq_q: int, seq_k: int, window, causal: bool,
+          q_offset: int = 0):
+    """(Sq, Sk) additive mask.  ``window`` may be a traced int; <= 0 means
+    unbounded (global attention)."""
+    qpos = jnp.arange(seq_q)[:, None] + q_offset
+    kpos = jnp.arange(seq_k)[None, :]
+    ok = jnp.ones((seq_q, seq_k), bool)
+    if causal:
+        ok &= kpos <= qpos
+    window = jnp.asarray(window)
+    ok &= (kpos > qpos - window) | (window <= 0)
+    return jnp.where(ok, 0.0, NEG_INF)
+
+
+def attention(cfg: ModelConfig, params, x, positions, *, window: int,
+              causal: bool = True, rope_theta: float | None = None,
+              kv_override=None):
+    """Training/prefill attention.  x: (B,S,D) -> (B,S,D).
+
+    kv_override: (k, v) from an encoder (cross-attention); disables rope on
+    kv and causal masking.
+
+    When cfg.attn_q_chunk > 0 and the sequence is long, the scores are
+    computed in q-chunks (and, for sliding-window layers, against a sliced
+    k-band) — the jnp twin of the flash kernel's blocking that keeps the
+    temp footprint to O(chunk x S) instead of O(S^2).  Numerics are
+    identical (full-precision softmax over all visible keys).
+    """
+    B, S, D = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    q = sharding.shard(q, "batch", "seq", "heads", None)
+    if kv_override is None:
+        k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+        theta = rope_theta if rope_theta is not None else cfg.rope_theta
+        # static 0 disables rope (whisper: learned positions); traced
+        # per-layer thetas are always > 0.
+        if not (isinstance(theta, (int, float)) and theta <= 0):
+            q = nn.rope(q, positions, theta)
+            k = nn.rope(k, positions, theta)
+    else:
+        k, v = kv_override
+        causal = False
+        window = 0
+    k = sharding.shard(k, "batch", "seq", "kv_heads", None)
+    v = sharding.shard(v, "batch", "seq", "kv_heads", None)
+
+    k = _expand_kv(k, cfg.q_per_kv)
+    v = _expand_kv(v, cfg.q_per_kv)
+
+    cq = cfg.attn_q_chunk
+    if cq and S > cq and S % cq == 0 and isinstance(window, int):
+        out = _chunked_attention(cfg, q, k, v, window=window, causal=causal,
+                                 q_chunk=cq)
+    else:
+        out = _full_attention(cfg, q, k, v, window=window, causal=causal)
+    out = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return sharding.shard(out, "batch", "seq", "embed")
+
+
+def _full_attention(cfg, q, k, v, *, window, causal):
+    scale = 1.0 / math.sqrt(cfg.head_dim)
+    scores = jnp.einsum("bqhk,bshk->bhqs", q, k).astype(jnp.float32) * scale
+    if cfg.attn_softcap > 0:
+        scores = nn.softcap(scores, cfg.attn_softcap)
+    scores = scores + _mask(q.shape[1], k.shape[1], window, causal)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhqs,bshk->bqhk", probs, v)
+
+
+def _chunked_attention(cfg, q, k, v, *, window: int, causal: bool,
+                       q_chunk: int):
+    """Blocked attention over q-chunks; local layers slice a k-band.
+
+    Assumes positions are 0..S-1 (true for every trunk call; decode uses
+    ``decode_attention``).  Exact — not an approximation.
+    """
+    B, S, H, hd = q.shape
+    Sk = k.shape[1]
+    scale = 1.0 / math.sqrt(cfg.head_dim)
+
+    band = bool(window and window > 0 and causal and Sk == S)
+    if band:
+        # PERF-B1 (refuted, EXPERIMENTS.md §Perf): narrowing q-chunks to
+        # 128 shrinks the score tile S x (cq + window) but re-reads the
+        # overlapping k-band nq times — measured net +10% HBM bytes, so
+        # the chunk stays at cfg.attn_q_chunk.
+        klen = min(Sk, q_chunk + ((window + 127) // 128) * 128)
+    else:
+        klen = Sk
+    nq = S // q_chunk
+
+    def one_chunk(ci):
+        z = jnp.zeros((), jnp.int32)
+        qs = jnp.asarray(ci * q_chunk, jnp.int32)
+        qc = jax.lax.dynamic_slice(q, (z, qs, z, z), (B, q_chunk, H, hd))
+        if band and klen < Sk:
+            ks = jnp.clip(qs + q_chunk - klen, 0, Sk - klen)
+            ks = jnp.asarray(ks, jnp.int32)
+            kc = jax.lax.dynamic_slice(k, (z, ks, z, z), (B, klen, H, hd))
+            vc = jax.lax.dynamic_slice(v, (z, ks, z, z), (B, klen, H, hd))
+            kpos = ks + jnp.arange(klen)
+        else:
+            kc, vc = k, v
+            kpos = jnp.arange(klen)
+        qpos = qs + jnp.arange(q_chunk)
+        scores = jnp.einsum("bqhk,bshk->bhqs", qc,
+                            kc).astype(jnp.float32) * scale
+        if cfg.attn_softcap > 0:
+            scores = nn.softcap(scores, cfg.attn_softcap)
+        ok = jnp.ones((q_chunk, klen), bool)
+        if causal:
+            ok &= kpos[None, :] <= qpos[:, None]
+        if window and window > 0:
+            ok &= kpos[None, :] > qpos[:, None] - window
+        scores = jnp.where(ok[None, None], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1).astype(vc.dtype)
+        return jnp.einsum("bhqs,bshk->bqhk", probs, vc)
+
+    if cfg.scan_layers:
+        # checkpoint per chunk: the backward recomputes one chunk's scores
+        # at a time, so peak temp is O(chunk x klen) not O(S x S).
+        chunks = jax.lax.map(jax.checkpoint(one_chunk),
+                             jnp.arange(nq))                # (nq,B,cq,H,hd)
+    else:
+        chunks = jnp.stack([one_chunk(jnp.asarray(ci))
+                            for ci in range(nq)])
+    return jnp.moveaxis(chunks, 0, 1).reshape(B, S, H, hd)
+
+
+# ---------------------------------------------------------------------------
+# Decode caches.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class CacheSpec:
+    """Static description of one layer's KV cache."""
+
+    kind: str          # "full" | "ring"
+    length: int        # cache slots (= seq for full, = window for ring)
+
+
+def cache_spec(cfg: ModelConfig, layer_type: str, max_seq: int) -> CacheSpec:
+    if layer_type == "local":
+        return CacheSpec(kind="ring", length=min(cfg.window, max_seq))
+    return CacheSpec(kind="full", length=max_seq)
+
+
+def init_cache(cfg: ModelConfig, spec: CacheSpec, batch: int, dtype):
+    L = spec.length
+    return {
+        "k": jnp.zeros((batch, L, cfg.num_kv_heads, cfg.head_dim), dtype),
+        "v": jnp.zeros((batch, L, cfg.num_kv_heads, cfg.head_dim), dtype),
+        # absolute position stored in each slot (-1 = empty)
+        "pos": jnp.full((L,), -1, jnp.int32),
+    }
+
+
+def decode_attention(cfg: ModelConfig, params, cache, spec: CacheSpec, x,
+                     pos, *, window: int, rope_theta: float | None = None):
+    """Single-token decode.  x: (B,1,D); pos: scalar int32 absolute position.
+
+    Returns (out (B,1,D), new_cache).  The cache slot is ``pos % length``
+    (ring) or ``pos`` (full); masking uses the per-slot absolute positions,
+    so RoPE-at-write stays correct after wraparound.
+    """
+    B = x.shape[0]
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    theta = rope_theta if rope_theta is not None else cfg.rope_theta
+    positions = pos[None, None] * jnp.ones((B, 1), jnp.int32)
+    if not (isinstance(theta, (int, float)) and theta <= 0):
+        q = nn.rope(q, positions, theta)
+        k = nn.rope(k, positions, theta)
+
+    slot = (pos % spec.length if spec.kind == "ring" else pos)
+    slot = jnp.asarray(slot, jnp.int32)
+    z = jnp.zeros((), jnp.int32)
+    new_k = jax.lax.dynamic_update_slice(cache["k"], k, (z, slot, z, z))
+    new_v = jax.lax.dynamic_update_slice(cache["v"], v, (z, slot, z, z))
+    new_pos = jax.lax.dynamic_update_slice(
+        cache["pos"], pos[None].astype(jnp.int32), (slot,))
+
+    kk = _expand_kv(new_k, cfg.q_per_kv)
+    vv = _expand_kv(new_v, cfg.q_per_kv)
+    scale = 1.0 / math.sqrt(cfg.head_dim)
+    scores = jnp.einsum("bqhk,bshk->bhqs", q, kk).astype(jnp.float32) * scale
+    if cfg.attn_softcap > 0:
+        scores = nn.softcap(scores, cfg.attn_softcap)
+    valid = (new_pos >= 0) & (new_pos <= pos)
+    window = jnp.asarray(window)
+    valid &= (new_pos > pos - window) | (window <= 0)
+    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(vv.dtype)
+    out = jnp.einsum("bhqs,bshk->bqhk", probs, vv)
+    out = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return out, {"k": new_k, "v": new_v, "pos": new_pos}
+
+
+def prefill_cache(cfg: ModelConfig, spec: CacheSpec, k, v, positions):
+    """Build a cache from prefill-computed k/v.  k/v: (B,S,KV,D) with rope
+    already applied; positions: (S,)."""
+    B, S = k.shape[0], k.shape[1]
+    L = spec.length
+    if S <= L:
+        pad = L - S
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        pos = jnp.pad(positions.astype(jnp.int32), (0, pad),
+                      constant_values=-1)
+    else:  # keep the last L (ring semantics)
+        k, v = k[:, -L:], v[:, -L:]
+        pos = positions[-L:].astype(jnp.int32)
+    return {"k": k, "v": v, "pos": pos}

@@ -1,0 +1,188 @@
+"""Mixture-of-Experts with the paper's DyDD balancer as the token router.
+
+Standard top-k MoE with static per-expert capacity drops tokens whenever the
+router's load is skewed — exactly the "observations non-uniformly
+distributed" problem DyDD solves.  The mapping (DESIGN.md §4):
+
+  * sorted (expert-major) token order  <->  the 1D domain,
+  * per-expert chunk boundaries        <->  subdomain boundaries,
+  * routed-token counts                <->  observation loads l_i,
+  * expert ring (EP placement order)   <->  the processor graph G.
+
+Balancing = DyDD's scheduling step (``schedule_jnp`` with the precomputed
+ring-Laplacian pseudo-inverse) computes target counts; the migration step is
+realized by re-chunking the expert-major sorted order at the new boundaries
+— movement is *adjacent-expert only* by construction, the jnp analogue of
+``dydd.migrate_1d``.  Tokens that migrate are re-weighted by their router
+probability for the receiving expert, so the estimator stays consistent.
+
+All shapes are static: dispatch uses argsort + capacity-bounded one-hot
+scatter; expert FFN weights are TP-sharded on d_ff (see runtime/sharding).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import dydd
+from repro.models import nn
+from repro.models.config import ModelConfig
+from repro.runtime import sharding
+
+
+def make_moe_params(b: nn.Builder, cfg: ModelConfig):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    v = cfg.moe_virtual_experts if cfg.moe_ep else 1
+    ev, fv = e * v, f // v
+    if cfg.moe_ep:
+        # expert parallelism: whole (virtual) experts sharded over 'model'
+        # (PERF-A2/C1).  When e < model-axis width, each expert is split
+        # into v half-width shards ("virtual experts") so e*v divides the
+        # axis — partial d_ff sums are added at combine time.
+        ax_up = ("moe_expert", "embed", None)
+        ax_dn = ("moe_expert", None, "embed")
+    else:
+        # d_ff tensor parallelism (experts replicated over 'model')
+        ax_up = ("expert", "embed", "ff")
+        ax_dn = ("expert", "ff", "embed")
+    return {
+        "router": b.param((d, e), ("embed", "expert")),
+        "w_up": b.param((ev, d, fv), ax_up),
+        "w_gate": b.param((ev, d, fv), ax_up),
+        "w_down": b.param((ev, fv, d), ax_dn),
+    }
+
+
+def _ring_operators(e: int):
+    """Precomputed (pinvL, incidence) for the expert ring graph."""
+    topo_edges = dydd.ring_edges(e)
+    L = dydd.laplacian(e, topo_edges)
+    pinvL = np.linalg.pinv(L)
+    inc = dydd.incidence_matrix(e, topo_edges)
+    return jnp.asarray(pinvL), jnp.asarray(inc), topo_edges
+
+
+def dydd_target_counts(counts, pinvL, incidence, capacity):
+    """DyDD scheduling step on the expert ring (paper Table 13, on-device).
+
+    counts: (E,) routed-token counts.  Returns (E,) target counts: loads
+    after applying the per-edge migrations delta = round(inc @ pinv(L) @ b),
+    clamped to [0, capacity].
+    """
+    deltas = dydd.schedule_jnp(counts.astype(jnp.float32), pinvL, incidence)
+    new = counts.astype(jnp.float32) - incidence.T @ deltas
+    new = jnp.clip(new, 0.0, capacity)
+    return jnp.round(new).astype(jnp.int32)
+
+
+def apply_moe(cfg: ModelConfig, params, x):
+    """x: (B,S,D) -> (B,S,D).  vmapped over batch rows."""
+    e, k = cfg.num_experts, cfg.experts_per_token
+    S = x.shape[1]
+    capacity = int(np.ceil(S * k / e * cfg.capacity_factor))
+    capacity = max(8, min(capacity, S))
+    pinvL, inc, _ = _ring_operators(e)
+
+    def one_row(xr):  # xr: (S, D)
+        logits = xr @ params["router"]                       # (S, E)
+        probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+        top_p, top_e = jax.lax.top_k(probs, k)               # (S, k)
+        flat_e = top_e.reshape(-1)                           # (S*k,)
+        flat_p = top_p.reshape(-1)
+        flat_tok = jnp.repeat(jnp.arange(S), k)
+
+        # ----- DyDD scheduling: counts -> balanced target counts --------
+        counts = jnp.sum(jax.nn.one_hot(flat_e, e, dtype=jnp.int32), axis=0)
+        if cfg.moe_dydd_balance:
+            target = dydd_target_counts(counts, pinvL, inc, capacity)
+        else:
+            target = jnp.minimum(counts, capacity)
+
+        # ----- migration: expert-major sort, re-chunk at new boundaries -
+        # sort by (expert asc, prob desc): low-confidence tokens sit at
+        # chunk edges and are the ones that migrate to the adjacent expert.
+        # stop_gradient: the ORDER is a discrete routing decision; gradients
+        # flow through the gate values only (also works around a jaxlib
+        # batched-gather-VJP limitation in this container).
+        order = jnp.argsort(jax.lax.stop_gradient(
+            flat_e.astype(jnp.float32) - flat_p * 0.5))
+        sorted_tok = flat_tok[order]
+        starts = jnp.cumsum(target) - target                 # (E,)
+        ranks = jnp.arange(S * k)
+        # assigned expert after migration = which chunk the rank falls in
+        new_e = jnp.searchsorted(jnp.cumsum(target), ranks, side="right")
+        new_e = jnp.minimum(new_e, e - 1)
+        pos_in_e = ranks - starts[new_e]
+        valid = pos_in_e < capacity
+        # ranks beyond sum(target) are dropped
+        valid &= ranks < jnp.sum(target)
+
+        # combine weight = router prob of the *receiving* expert
+        gate = probs[sorted_tok, new_e]
+        gate = jnp.where(valid, gate, 0.0)
+
+        # ----- dispatch: scatter tokens into (E, C, D) ------------------
+        slot = jnp.where(valid, new_e * capacity + pos_in_e, e * capacity)
+        disp = jnp.zeros((e * capacity + 1, xr.shape[-1]), xr.dtype)
+        disp = disp.at[slot].add(xr[sorted_tok])
+        disp = disp[:-1].reshape(e, capacity, xr.shape[-1])
+        return disp, (sorted_tok, slot, gate)
+
+    disp, aux = jax.vmap(one_row)(x)
+    exp_axis = "moe_expert" if cfg.moe_ep else "expert"
+    v = cfg.moe_virtual_experts if cfg.moe_ep else 1
+    if v > 1:
+        # duplicate dispatch rows onto each expert's v virtual shards
+        disp = jnp.repeat(disp, v, axis=1)        # (B, E*v, C, D)
+    disp = sharding.shard(disp, "batch", exp_axis, None, "embed")
+
+    # ----- expert FFN (EP: local full-width matmuls; TP: d_ff sharded) --
+    act_fn = jax.nn.silu if cfg.act == "silu" else (
+        lambda u: jax.nn.gelu(u, approximate=True))
+    up = jnp.einsum("becd,edf->becf", disp, params["w_up"])
+    gate_h = act_fn(jnp.einsum("becd,edf->becf", disp, params["w_gate"]))
+    up = sharding.shard(up, "batch", exp_axis, None,
+                        None if cfg.moe_ep else "ff")
+    h = gate_h * up
+    out_e = jnp.einsum("becf,efd->becd", h, params["w_down"])
+    if v > 1:
+        # partial d_ff sums from the v virtual shards add up
+        B_, EV, C_, D_ = out_e.shape
+        out_e = out_e.reshape(B_, EV // v, v, C_, D_).sum(axis=2)
+    out_e = sharding.shard(out_e, "batch", exp_axis, None, "embed")
+
+    # ----- combine: gather back with gate weights ------------------------
+    def combine_row(out_r, aux_r, S_, D_):
+        sorted_tok, slot, gate = aux_r
+        flat = jnp.concatenate(
+            [out_r.reshape(-1, D_), jnp.zeros((1, D_), out_r.dtype)], axis=0)
+        contrib = flat[jnp.minimum(slot, flat.shape[0] - 1)] \
+            * gate[:, None].astype(out_r.dtype)
+        y = jnp.zeros((S_, D_), out_r.dtype)
+        return y.at[sorted_tok].add(contrib)
+
+    S_, D_ = x.shape[1], x.shape[2]
+    y = jax.vmap(lambda o, a: combine_row(o, a, S_, D_))(out_e, aux)
+    return sharding.shard(y, "batch", "seq", "embed")
+
+
+def load_balance_stats(cfg: ModelConfig, params, x):
+    """Diagnostics: per-expert counts before/after DyDD and the paper's
+    balance ratio E = min/max (used by tests and the MoE benchmark)."""
+    e, k = cfg.num_experts, cfg.experts_per_token
+    S = x.shape[1]
+    capacity = int(np.ceil(S * k / e * cfg.capacity_factor))
+    capacity = max(8, min(capacity, S))
+    pinvL, inc, _ = _ring_operators(e)
+    logits = x @ params["router"]
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    _, top_e = jax.lax.top_k(probs, k)
+    counts = jnp.sum(jax.nn.one_hot(top_e.reshape(x.shape[0], -1), e,
+                                    dtype=jnp.int32), axis=(0, 1))
+    per_row = counts.astype(jnp.int32) // x.shape[0]
+    if cfg.moe_dydd_balance:
+        target = dydd_target_counts(per_row, pinvL, inc, capacity)
+    else:
+        target = jnp.minimum(per_row, capacity)
+    return counts, target

@@ -1,0 +1,198 @@
+"""Parameter builder and basic neural-net primitives (pure JAX, no flax).
+
+Every parameter is declared once through ``Builder.param`` with its shape,
+initializer and *logical* sharding axes; the same declaration code produces
+(i) initialized arrays, (ii) jax.ShapeDtypeStruct skeletons for the dry-run,
+and (iii) PartitionSpecs for pjit — guaranteeing the three never drift.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.runtime import sharding
+
+
+class Builder:
+    """Collects parameter declarations in one of three modes."""
+
+    def __init__(self, mode: str, key: jax.Array | None = None,
+                 dtype=jnp.float32):
+        assert mode in ("init", "spec", "shape")
+        self.mode = mode
+        self._key = key
+        self.dtype = dtype
+
+    def _next_key(self):
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    def param(self, shape, axes, init="normal", scale: float | None = None):
+        if self.mode == "spec":
+            return sharding.param_spec(shape, *axes)
+        if self.mode == "shape":
+            return jax.ShapeDtypeStruct(shape, self.dtype)
+        if init == "zeros":
+            return jnp.zeros(shape, self.dtype)
+        if init == "ones":
+            return jnp.ones(shape, self.dtype)
+        if scale is None:
+            # fan-in scaling
+            fan_in = shape[0] if len(shape) > 1 else shape[-1]
+            scale = 1.0 / math.sqrt(max(fan_in, 1))
+        return (scale * jax.random.normal(self._next_key(), shape)
+                ).astype(self.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms.
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, weight, eps: float):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + weight.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(x, weight, bias, eps: float):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    out = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (out * weight.astype(jnp.float32)
+            + bias.astype(jnp.float32)).astype(dt)
+
+
+def make_norm_params(b: Builder, d: int, kind: str):
+    if kind == "rmsnorm":
+        return {"scale": b.param((d,), (None,), init="zeros")}
+    return {"scale": b.param((d,), (None,), init="ones"),
+            "bias": b.param((d,), (None,), init="zeros")}
+
+
+def apply_norm(params, x, kind: str, eps: float):
+    if kind == "rmsnorm":
+        return rms_norm(x, params["scale"], eps)
+    return layer_norm(x, params["scale"], params["bias"], eps)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings.
+# ---------------------------------------------------------------------------
+
+def rope(x, positions, theta):
+    """Apply RoPE.  x: (..., S, H, D), positions: (..., S).
+    ``theta`` may be a traced scalar (per-layer theta under scan)."""
+    d = x.shape[-1]
+    half = d // 2
+    theta = jnp.asarray(theta, jnp.float32)
+    freqs = jnp.exp(-jnp.arange(0, half, dtype=jnp.float32)
+                    * (jnp.log(theta) / half))
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, half)
+    ang = ang[..., None, :]                                    # (..., S, 1, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin],
+                          axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP.
+# ---------------------------------------------------------------------------
+
+def make_mlp_params(b: Builder, d: int, f: int, gated: bool):
+    p = {"w_up": b.param((d, f), ("embed", "ff")),
+         "w_down": b.param((f, d), ("ff", "embed"))}
+    if gated:
+        p["w_gate"] = b.param((d, f), ("embed", "ff"))
+    return p
+
+
+def apply_mlp(params, x, act: str, gated: bool):
+    act_fn = jax.nn.silu if act == "silu" else (
+        lambda v: jax.nn.gelu(v, approximate=True))
+    up = x @ params["w_up"]
+    up = sharding.shard(up, "batch", "seq", "ff")
+    if gated:
+        gate = act_fn(x @ params["w_gate"])
+        h = gate * up
+    else:
+        h = act_fn(up)
+    out = h @ params["w_down"]
+    return sharding.shard(out, "batch", "seq", "embed")
+
+
+# ---------------------------------------------------------------------------
+# Loss.
+# ---------------------------------------------------------------------------
+
+def softcap(x, cap: float):
+    return jnp.tanh(x / cap) * cap if cap > 0 else x
+
+
+def cross_entropy(logits, labels, mask=None):
+    """Mean token cross-entropy in f32.  logits: (B,S,V), labels: (B,S)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, labels[..., None],
+                                 axis=-1)[..., 0]
+    nll = lse - picked
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def chunked_loss(h_final, embed, labels, chunk: int, softcap_val: float,
+                 mask=None, unroll: bool = False):
+    """Sequence-chunked cross entropy: never materializes (B,S,V).
+
+    h_final: (B,S,D) final hidden states; embed: (V,D) tied output table.
+    This is one of the §Perf memory optimizations (see EXPERIMENTS.md).
+    ``unroll`` is the dry-run analysis mode (XLA cost_analysis counts
+    while-loop bodies once).
+    """
+    B, S, D = h_final.shape
+    assert S % chunk == 0, (S, chunk)
+    n_chunks = S // chunk
+    h = h_final.reshape(B, n_chunks, chunk, D).swapaxes(0, 1)
+    y = labels.reshape(B, n_chunks, chunk).swapaxes(0, 1)
+    if mask is None:
+        m = jnp.ones((n_chunks, B, chunk), jnp.float32)
+    else:
+        m = mask.reshape(B, n_chunks, chunk).swapaxes(0, 1)
+
+    def body(carry, inp):
+        hc, yc, mc = inp
+        logits = softcap(hc @ embed.T, softcap_val).astype(jnp.float32)
+        logits = sharding.shard(logits, "loss_batch", "seq", "vocab")
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        # label pick via masked sum, NOT take_along_axis: a gather over the
+        # vocab-sharded axis would all-gather the full logits; the iota
+        # compare keeps the reduction local + one tiny all-reduce.
+        vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 2)
+        picked = jnp.sum(jnp.where(vocab_iota == yc[..., None], logits,
+                                   0.0), axis=-1)
+        nll = (lse - picked) * mc
+        tot, cnt = carry
+        return (tot + jnp.sum(nll), cnt + jnp.sum(mc)), None
+
+    init = (jnp.zeros(()), jnp.zeros(()))
+    if unroll:
+        carry = init
+        for c in range(n_chunks):
+            carry, _ = body(carry, (h[c], y[c], m[c]))
+        tot, cnt = carry
+    else:
+        # checkpoint per chunk: backward recomputes one chunk's logits at a
+        # time instead of keeping n_chunks x (B, chunk, V) residuals.
+        (tot, cnt), _ = jax.lax.scan(jax.checkpoint(body), init, (h, y, m))
+    return tot / jnp.maximum(cnt, 1.0)

@@ -1,0 +1,134 @@
+"""RG-LRU recurrent block (RecurrentGemma, arXiv:2402.19427).
+
+The temporal mixing is the Real-Gated Linear Recurrent Unit:
+
+    r_t = sigmoid(W_a x_t)                    (recurrence gate)
+    i_t = sigmoid(W_x x_t)                    (input gate)
+    a_t = exp(-c * softplus(Lambda) * r_t)    (per-channel decay, c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+wrapped in the Griffin recurrent block: linear in-proj to a gated branch
+(GeLU) and a recurrent branch (temporal conv1d width 4 -> RG-LRU), merged
+by elementwise product and projected out.
+
+Training uses ``jax.lax.associative_scan`` over the (a, b) linear
+recurrence; the Pallas kernel in ``repro.kernels.rglru_scan`` implements the
+same blocked scan for TPU and is validated against ``rglru_ref`` here.
+Decode carries (h, conv_state) — O(1) per step.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import nn
+from repro.models.config import ModelConfig
+from repro.runtime import sharding
+
+_C = 8.0
+_MAX_SQRT_GRADIENT = 1000.0
+
+
+def make_rglru_params(b: nn.Builder, cfg: ModelConfig):
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    conv = 4
+    return {
+        "w_in_rec": b.param((d, w), ("embed", "lru")),
+        "w_in_gate": b.param((d, w), ("embed", "lru")),
+        "w_out": b.param((w, d), ("lru", "embed")),
+        "conv_w": b.param((conv, w), (None, "lru"),
+                          scale=1.0 / math.sqrt(conv)),
+        "conv_b": b.param((w,), ("lru",), init="zeros"),
+        "gate_a": b.param((w,), ("lru",), init="zeros"),
+        "gate_x": b.param((w,), ("lru",), init="zeros"),
+        # Lambda parametrized so a in (0.9, 0.999) at init
+        "log_lambda": b.param((w,), ("lru",), init="zeros"),
+    }
+
+
+def _decay(params, x_rec):
+    """Per-timestep decay a_t and input scale — both like x_rec.
+
+    r_t = sigmoid(x_rec + gate_a) is the recurrence gate; the decay is
+    a_t = exp(-c * softplus(Lambda) * r_t) as in the paper, with Lambda
+    parametrized so a ~ 0.96..0.999 at init.
+    """
+    lam = jax.nn.softplus(params["log_lambda"] + 4.0) / _C
+    r = jax.nn.sigmoid(x_rec + params["gate_a"])
+    a = jnp.exp(-_C * lam * r)
+    return a, jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12))
+
+
+def rglru_scan_ref(a, bx):
+    """Associative linear recurrence h_t = a_t h_{t-1} + bx_t.
+
+    a, bx: (B, S, W) -> h: (B, S, W).  Pure-jnp oracle, also used in
+    training via associative_scan (log-depth).
+    """
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, br + ar * bl
+
+    a_s, b_s = jax.lax.associative_scan(combine, (a, bx), axis=1)
+    return b_s
+
+
+def apply_rglru(cfg: ModelConfig, params, x, positions=None):
+    """Griffin recurrent block, training/prefill.  x: (B,S,D)."""
+    B, S, D = x.shape
+    gate = jax.nn.gelu(x @ params["w_in_gate"], approximate=True)
+    rec = x @ params["w_in_rec"]
+    rec = sharding.shard(rec, "batch", "seq", "lru")
+
+    # temporal conv1d (causal, width 4)
+    conv = params["conv_w"]
+    width = conv.shape[0]
+    rec_pad = jnp.pad(rec, ((0, 0), (width - 1, 0), (0, 0)))
+    rec_c = sum(rec_pad[:, i:i + S, :] * conv[i] for i in range(width))
+    rec_c = rec_c + params["conv_b"]
+
+    a, b_scale = _decay(params, rec_c)
+    h = rglru_scan_ref(a.astype(jnp.float32),
+                       (b_scale * jax.nn.sigmoid(params["gate_x"])
+                        * rec_c).astype(jnp.float32))
+    h = h.astype(x.dtype)
+    out = (h * gate) @ params["w_out"]
+    return sharding.shard(out, "batch", "seq", "embed")
+
+
+# ---------------------------------------------------------------------------
+# Decode (single step, O(1) state).
+# ---------------------------------------------------------------------------
+
+def init_rglru_cache(cfg: ModelConfig, batch: int, dtype):
+    w = cfg.lru_width or cfg.d_model
+    return {
+        "h": jnp.zeros((batch, w), jnp.float32),
+        "conv": jnp.zeros((batch, 4 - 1, w), dtype),
+    }
+
+
+def decode_rglru(cfg: ModelConfig, params, cache, x):
+    """x: (B,1,D) -> (out (B,1,D), new_cache)."""
+    B = x.shape[0]
+    xt = x[:, 0]
+    gate = jax.nn.gelu(xt @ params["w_in_gate"], approximate=True)
+    rec = xt @ params["w_in_rec"]
+
+    conv_w = params["conv_w"]
+    width = conv_w.shape[0]
+    hist = jnp.concatenate([cache["conv"], rec[:, None, :]], axis=1)
+    rec_c = sum(hist[:, i, :] * conv_w[i] for i in range(width))
+    rec_c = rec_c + params["conv_b"]
+    new_conv = hist[:, 1:, :]
+
+    a, b_scale = _decay(params, rec_c[:, None, :])
+    a, b_scale = a[:, 0], b_scale[:, 0]
+    bx = b_scale * jax.nn.sigmoid(params["gate_x"]) * rec_c
+    h = a.astype(jnp.float32) * cache["h"] + bx.astype(jnp.float32)
+    out = ((h.astype(x.dtype) * gate) @ params["w_out"])[:, None, :]
+    return out, {"h": h, "conv": new_conv}

@@ -1,0 +1,207 @@
+"""Mamba-2 SSD (state-space duality) block (arXiv:2405.21060).
+
+The selective SSM with scalar-times-identity A is computed with the SSD
+chunked algorithm: within a chunk the output is a masked attention-like
+matmul (duality), and chunk-to-chunk information flows through the
+recurrent state  S_c = (decay) S_{c-1} + B_c^T (decay-weighted X_c).
+
+Shapes follow the Mamba-2 reference: inner dim  di = expand * d_model,
+heads nh = di / headdim, state N = ssm_state, groups G (B/C shared
+across heads within a group).
+
+``ssd_ref`` below is the pure-jnp oracle; the Pallas kernel in
+``repro.kernels.ssd_scan`` computes the same chunked recursion with VMEM
+tiling and is validated against it.  Decode carries (conv_state,
+ssm_state (B, nh, hd, N)) — O(1) per token.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import nn
+from repro.models.config import ModelConfig
+from repro.runtime import sharding
+
+
+def make_ssd_params(b: nn.Builder, cfg: ModelConfig):
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    nh = di // cfg.ssm_headdim
+    g, N = cfg.ssm_ngroups, cfg.ssm_state
+    conv_dim = di + 2 * g * N
+    return {
+        "in_proj": b.param((d, 2 * di + 2 * g * N + nh), ("embed",
+                                                          "ssm_inner")),
+        "conv_w": b.param((cfg.ssm_conv, conv_dim), (None, "ssm_inner"),
+                          scale=1.0 / math.sqrt(cfg.ssm_conv)),
+        "conv_b": b.param((conv_dim,), ("ssm_inner",), init="zeros"),
+        "A_log": b.param((nh,), (None,), init="zeros"),
+        "D": b.param((nh,), (None,), init="ones"),
+        "dt_bias": b.param((nh,), (None,), init="zeros"),
+        "norm": b.param((di,), ("ssm_inner",), init="zeros"),
+        "out_proj": b.param((di, d), ("ssm_inner", "embed")),
+    }
+
+
+def ssd_ref(x, dt, A, B, C, chunk: int, unroll: bool = False):
+    """SSD chunked reference.
+
+    x:  (b, s, nh, hd)   inputs per head
+    dt: (b, s, nh)       positive step sizes (after softplus)
+    A:  (nh,)            negative per-head decay rates
+    B:  (b, s, g, N)     input maps (g groups broadcast over heads)
+    C:  (b, s, g, N)     output maps
+    Returns y: (b, s, nh, hd).
+    """
+    b, s, nh, hd = x.shape
+    g, N = B.shape[2], B.shape[3]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    rep = nh // g
+
+    xc = x.reshape(b, nc, chunk, nh, hd)
+    dtc = dt.reshape(b, nc, chunk, nh)
+    Bc = jnp.repeat(B.reshape(b, nc, chunk, g, N), rep, axis=3)
+    Cc = jnp.repeat(C.reshape(b, nc, chunk, g, N), rep, axis=3)
+
+    dA = dtc * A  # (b,nc,l,nh) log-decay per step
+    cum = jnp.cumsum(dA, axis=2)                      # within-chunk cumsum
+    # intra-chunk (dual / attention-like) term
+    # L[i,j] = exp(cum_i - cum_j) for i >= j else 0
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (b,nc,l,l,nh)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    L = jnp.where(mask[None, None, :, :, None], jnp.exp(diff), 0.0)
+    CB = jnp.einsum("bclhn,bcmhn->bclmh", Cc, Bc)          # (b,nc,l,l,nh)
+    y_intra = jnp.einsum("bclmh,bclmh,bcmh,bcmhp->bclhp",
+                         CB, L, dtc, xc)
+
+    # chunk states: S_c = sum_j exp(cum_last - cum_j) dt_j B_j x_j^T
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)        # (b,nc,l,nh)
+    S = jnp.einsum("bclh,bclh,bclhn,bclhp->bchnp",
+                   decay_to_end, dtc, Bc, xc)              # (b,nc,nh,N,hd)
+
+    # inter-chunk recurrence over c:  S_prev' = exp(cum_last) S_prev + S
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                # (b,nc,nh)
+
+    def scan_fn(Sprev, inp):
+        Sc, dec = inp
+        Snew = dec[:, :, None, None] * Sprev + Sc
+        return Snew, Sprev
+
+    S_t = jnp.moveaxis(S, 1, 0)                 # (nc,b,nh,N,hd)
+    dec_t = jnp.moveaxis(chunk_decay, 1, 0)     # (nc,b,nh)
+    init = jnp.zeros_like(S_t[0])
+    if unroll:   # dry-run analysis mode: while-loops undercount in XLA cost
+        carry, outs = init, []
+        for c in range(nc):
+            carry, prev = scan_fn(carry, (S_t[c], dec_t[c]))
+            outs.append(prev)
+        Sprev_t = jnp.stack(outs)
+    else:
+        _, Sprev_t = jax.lax.scan(scan_fn, init, (S_t, dec_t))
+    Sprev = jnp.moveaxis(Sprev_t, 0, 1)         # (b,nc,nh,N,hd) state *before* chunk
+
+    # inter-chunk contribution: y_j += C_j exp(cum_j) S_prev
+    decay_from_start = jnp.exp(cum)             # (b,nc,l,nh)
+    y_inter = jnp.einsum("bclhn,bclh,bchnp->bclhp",
+                         Cc, decay_from_start, Sprev)
+    y = (y_intra + y_inter).reshape(b, s, nh, hd)
+    return y
+
+
+def apply_ssd(cfg: ModelConfig, params, x, positions=None):
+    """Mamba-2 block, training/prefill.  x: (B,S,D)."""
+    B_, S, D = x.shape
+    di = cfg.ssm_expand * D
+    nh = di // cfg.ssm_headdim
+    g, N = cfg.ssm_ngroups, cfg.ssm_state
+
+    zxbcdt = x @ params["in_proj"]
+    z, xs, Bm, Cm, dt = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + g * N, 2 * di + 2 * g * N], axis=-1)
+
+    # causal conv over (xs, B, C)
+    xbc = jnp.concatenate([xs, Bm, Cm], axis=-1)
+    width = cfg.ssm_conv
+    pad = jnp.pad(xbc, ((0, 0), (width - 1, 0), (0, 0)))
+    conv = sum(pad[:, i:i + S, :] * params["conv_w"][i]
+               for i in range(width)) + params["conv_b"]
+    conv = jax.nn.silu(conv)
+    xs, Bm, Cm = jnp.split(conv, [di, di + g * N], axis=-1)
+
+    dt = jax.nn.softplus(dt + params["dt_bias"])           # (B,S,nh)
+    A = -jnp.exp(params["A_log"])                          # (nh,)
+    xh = xs.reshape(B_, S, nh, cfg.ssm_headdim)
+    chunk = min(cfg.ssm_chunk, S)
+    pad = (-S) % chunk                                     # causal: safe
+    xh_p = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    dt_p = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    Bm_p = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+    Cm_p = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    Sp = S + pad
+    y = ssd_ref(xh_p.astype(jnp.float32), dt_p.astype(jnp.float32), A,
+                Bm_p.reshape(B_, Sp, g, N).astype(jnp.float32),
+                Cm_p.reshape(B_, Sp, g, N).astype(jnp.float32),
+                chunk, unroll=not cfg.scan_layers)[:, :S]
+    y = y.astype(x.dtype) + xh * params["D"][None, None, :, None]
+    y = y.reshape(B_, S, di)
+    y = nn.rms_norm(y * jax.nn.silu(z), params["norm"], cfg.norm_eps)
+    out = y @ params["out_proj"]
+    return sharding.shard(out, "batch", "seq", "embed")
+
+
+# ---------------------------------------------------------------------------
+# Decode.
+# ---------------------------------------------------------------------------
+
+def init_ssd_cache(cfg: ModelConfig, batch: int, dtype):
+    di = cfg.ssm_expand * cfg.d_model
+    nh = di // cfg.ssm_headdim
+    g, N = cfg.ssm_ngroups, cfg.ssm_state
+    conv_dim = di + 2 * g * N
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype),
+        "state": jnp.zeros((batch, nh, N, cfg.ssm_headdim), jnp.float32),
+    }
+
+
+def decode_ssd(cfg: ModelConfig, params, cache, x):
+    """x: (B,1,D) -> (out (B,1,D), new_cache).  Exact recurrent step:
+    S <- exp(dt*A) S + dt * B x^T ;  y = C S + D x."""
+    B_ = x.shape[0]
+    D = x.shape[-1]
+    di = cfg.ssm_expand * D
+    nh = di // cfg.ssm_headdim
+    g, N = cfg.ssm_ngroups, cfg.ssm_state
+
+    zxbcdt = x[:, 0] @ params["in_proj"]
+    z, xs, Bm, Cm, dt = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + g * N, 2 * di + 2 * g * N], axis=-1)
+
+    xbc = jnp.concatenate([xs, Bm, Cm], axis=-1)
+    hist = jnp.concatenate([cache["conv"], xbc[:, None, :]], axis=1)
+    conv = sum(hist[:, i, :] * params["conv_w"][i]
+               for i in range(cfg.ssm_conv)) + params["conv_b"]
+    conv = jax.nn.silu(conv)
+    new_conv = hist[:, 1:, :]
+    xs, Bm, Cm = jnp.split(conv, [di, di + g * N], axis=-1)
+
+    dt = jax.nn.softplus(dt + params["dt_bias"]).astype(jnp.float32)
+    A = -jnp.exp(params["A_log"])
+    xh = xs.reshape(B_, nh, cfg.ssm_headdim).astype(jnp.float32)
+    rep = nh // g
+    Bh = jnp.repeat(Bm.reshape(B_, g, N), rep, axis=1).astype(jnp.float32)
+    Ch = jnp.repeat(Cm.reshape(B_, g, N), rep, axis=1).astype(jnp.float32)
+
+    decay = jnp.exp(dt * A)                                # (B,nh)
+    upd = jnp.einsum("bh,bhn,bhp->bhnp", dt, Bh, xh)
+    state = decay[:, :, None, None] * cache["state"] + upd
+    y = jnp.einsum("bhn,bhnp->bhp", Ch, state)
+    y = y.astype(x.dtype) + xh.astype(x.dtype) * params["D"][None, :, None]
+    y = y.reshape(B_, di)
+    y = nn.rms_norm(y * jax.nn.silu(z), params["norm"], cfg.norm_eps)
+    out = (y @ params["out_proj"])[:, None, :]
+    return out, {"conv": new_conv, "state": state}

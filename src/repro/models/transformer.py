@@ -1,0 +1,881 @@
+"""The full model: init/apply/prefill/decode for every assigned arch.
+
+One flexible decoder (or encoder-decoder) transformer whose per-layer type
+comes from ``cfg.attn_pattern``:
+
+  * uniform attention archs (gemma/yi/glm4/phi3v/mixtral/olmoe/gemma3):
+    one ``lax.scan`` over stacked blocks; per-layer window & rope-theta ride
+    along as scanned arrays, so local:global mixtures share one body;
+  * recurrentgemma: scan over (rglru, rglru, local-attn) periods + unrolled
+    remainder;
+  * mamba2: scan over SSD blocks;
+  * whisper: encoder scan + decoder scan with cross-attention.
+
+Parameters, ShapeDtypeStructs and PartitionSpecs all come from the same
+declaration code (``models.nn.Builder``), so the dry-run sharding can never
+drift from the real initializer.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, moe, nn, rglru, ssd
+from repro.models.config import ModelConfig
+from repro.runtime import sharding
+
+
+# ---------------------------------------------------------------------------
+# Builders.
+# ---------------------------------------------------------------------------
+
+class _Stacked:
+    """Prepends a leading layer axis to every declared parameter."""
+
+    def __init__(self, b: nn.Builder, n: int):
+        self._b = b
+        self._n = n
+
+    def param(self, shape, axes, init="normal", scale=None):
+        if scale is None and init == "normal":
+            fan_in = shape[0] if len(shape) > 1 else shape[-1]
+            scale = 1.0 / math.sqrt(max(fan_in, 1))
+        return self._b.param((self._n,) + tuple(shape),
+                             (None,) + tuple(axes), init=init, scale=scale)
+
+
+def _attn_block(b, cfg: ModelConfig):
+    p = {"norm1": nn.make_norm_params(b, cfg.d_model, cfg.norm),
+         "attn": attention.make_attn_params(b, cfg),
+         "norm2": nn.make_norm_params(b, cfg.d_model, cfg.norm)}
+    if cfg.num_experts > 0:
+        p["moe"] = moe.make_moe_params(b, cfg)
+    elif cfg.d_ff > 0:
+        p["mlp"] = nn.make_mlp_params(b, cfg.d_model, cfg.d_ff,
+                                      cfg.gated_mlp)
+    return p
+
+
+def _rglru_block(b, cfg: ModelConfig):
+    return {"norm1": nn.make_norm_params(b, cfg.d_model, cfg.norm),
+            "rglru": rglru.make_rglru_params(b, cfg),
+            "norm2": nn.make_norm_params(b, cfg.d_model, cfg.norm),
+            "mlp": nn.make_mlp_params(b, cfg.d_model, cfg.d_ff,
+                                      cfg.gated_mlp)}
+
+
+def _ssd_block(b, cfg: ModelConfig):
+    return {"norm1": nn.make_norm_params(b, cfg.d_model, cfg.norm),
+            "ssd": ssd.make_ssd_params(b, cfg)}
+
+
+def _cross_block(b, cfg: ModelConfig):
+    """Whisper decoder block: self-attn + cross-attn + mlp."""
+    return {"norm1": nn.make_norm_params(b, cfg.d_model, cfg.norm),
+            "self_attn": attention.make_attn_params(b, cfg),
+            "norm_x": nn.make_norm_params(b, cfg.d_model, cfg.norm),
+            "cross_attn": attention.make_attn_params(b, cfg),
+            "norm2": nn.make_norm_params(b, cfg.d_model, cfg.norm),
+            "mlp": nn.make_mlp_params(b, cfg.d_model, cfg.d_ff,
+                                      cfg.gated_mlp)}
+
+
+def _build(cfg: ModelConfig, b: nn.Builder):
+    d, v = cfg.d_model, cfg.vocab_size
+    params: dict = {
+        # 'embed_table' replicates under the dp profile (PERF-B3): the
+        # FSDP gathers of the table per loss chunk cost more than the
+        # replicated copy.
+        "embed": b.param((v, d), ("vocab", "embed_table"), scale=1.0),
+        "final_norm": nn.make_norm_params(b, d, cfg.norm),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = b.param((v, d), ("vocab", "embed_table"))
+
+    if cfg.name.startswith("recurrentgemma") or (
+            "rglru" in cfg.attn_pattern and len(set(cfg.attn_pattern)) > 1):
+        period = len(cfg.attn_pattern)          # (rglru, rglru, local)
+        n_full = cfg.num_layers // period
+        rem = cfg.num_layers % period
+        params["periods"] = {
+            "r1": _rglru_block(_Stacked(b, n_full), cfg),
+            "r2": _rglru_block(_Stacked(b, n_full), cfg),
+            "attn": _attn_block(_Stacked(b, n_full), cfg),
+        }
+        if rem:
+            params["tail"] = _rglru_block(_Stacked(b, rem), cfg)
+    elif cfg.attn_pattern == ("ssd",):
+        params["blocks"] = _ssd_block(_Stacked(b, cfg.num_layers), cfg)
+    elif cfg.is_encoder_decoder:
+        params["enc_pos"] = b.param((cfg.encoder_seq, d), (None, "embed"),
+                                    scale=0.02)
+        # learned decoder positions; whisper's real context is 448 — the
+        # table is extended to cover the assigned mechanical decode_32k /
+        # prefill_32k shapes (DESIGN.md §5)
+        params["dec_pos"] = b.param((40960, d), (None, "embed"), scale=0.02)
+        params["encoder"] = _attn_block(_Stacked(b, cfg.encoder_layers), cfg)
+        params["enc_final_norm"] = nn.make_norm_params(b, d, cfg.norm)
+        params["decoder"] = _cross_block(_Stacked(b, cfg.num_layers), cfg)
+    else:
+        params["blocks"] = _attn_block(_Stacked(b, cfg.num_layers), cfg)
+    return params
+
+
+def init_params(cfg: ModelConfig, key: jax.Array, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    return _build(cfg, nn.Builder("init", key=key, dtype=dtype))
+
+
+def param_shapes(cfg: ModelConfig, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    return _build(cfg, nn.Builder("shape", dtype=dtype))
+
+
+def param_specs(cfg: ModelConfig):
+    with sharding.profile(cfg.sharding_profile):
+        return _build(cfg, nn.Builder("spec"))
+
+
+# ---------------------------------------------------------------------------
+# Per-layer statics (window / rope theta arrays for the scans).
+# ---------------------------------------------------------------------------
+
+def _layer_statics_py(cfg: ModelConfig):
+    windows, thetas = [], []
+    for i in range(cfg.num_layers):
+        t = cfg.layer_type(i)
+        if t == "local":
+            windows.append(cfg.window)
+            thetas.append(10000.0 if len(set(cfg.attn_pattern)) > 1
+                          else cfg.rope_theta)
+        else:
+            windows.append(0)
+            thetas.append(cfg.rope_theta)
+    return windows, thetas
+
+
+def _layer_statics(cfg: ModelConfig):
+    windows, thetas = _layer_statics_py(cfg)
+    return (jnp.asarray(windows, jnp.int32),
+            jnp.asarray(thetas, jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Forward (training / prefill trunk).
+# ---------------------------------------------------------------------------
+
+def _maybe_remat(cfg: ModelConfig, fn):
+    if cfg.remat in ("block", "group"):
+        return jax.checkpoint(fn,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    return fn
+
+
+def _scan_or_loop(cfg: ModelConfig, body, carry, xs_tree, length: int):
+    """lax.scan when cfg.scan_layers, else an unrolled python loop.
+
+    remat="block": every scan body is checkpointed — residual = one block
+    input per layer (O(L) residuals).
+    remat="group" (PERF-A3): layers are scanned in groups of
+    ``cfg.remat_group`` with the checkpoint at GROUP level — residuals
+    drop to O(L / g) block inputs at the cost of one extra in-group
+    forward during backprop (sqrt-remat; the fits-fix for mixtral-8x22b
+    whose 56 x 800 MB per-layer residuals overflow HBM).
+
+    The unrolled form is used by the dry-run analysis mode: XLA's
+    cost_analysis counts a while-loop body ONCE (verified in
+    EXPERIMENTS.md §Dry-run), so FLOPs/bytes/collective extraction happens
+    on unrolled lowerings while the fits-in-HBM proof uses the scan form.
+    Only the carry is returned (no ys).
+    """
+    if (cfg.remat == "group" and cfg.scan_layers
+            and length % cfg.remat_group == 0 and length > cfg.remat_group):
+        g = cfg.remat_group
+        # NESTED checkpointing: the group recompute must itself run
+        # block-checkpointed, otherwise the backward holds all g layers'
+        # internals at once (measured 3x WORSE, EXPERIMENTS.md §Perf A3).
+        inner = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+
+        def group_body(c, xs_group):
+            for j in range(g):
+                sl = jax.tree.map(lambda x: x[j], xs_group)
+                c, _ = inner(c, sl)
+            return c, None
+
+        grouped = jax.tree.map(
+            lambda x: x.reshape((length // g, g) + x.shape[1:]), xs_tree)
+        carry, _ = jax.lax.scan(_maybe_remat(cfg, group_body), carry,
+                                grouped)
+        return carry
+
+    body = _maybe_remat(cfg, body)
+    if cfg.scan_layers:
+        carry, _ = jax.lax.scan(body, carry, xs_tree)
+        return carry
+    for i in range(length):
+        sl = jax.tree.map(lambda x: x[i], xs_tree)
+        carry, _ = body(carry, sl)
+    return carry
+
+
+def _scan_or_loop_ys(cfg: ModelConfig, body, carry, xs_tree, length: int):
+    """Like _scan_or_loop but returns (carry, stacked_ys) — used by the
+    prefill/serve paths that collect per-layer caches."""
+    if cfg.scan_layers:
+        return jax.lax.scan(body, carry, xs_tree)
+    ys = []
+    for i in range(length):
+        sl = jax.tree.map(lambda x: x[i], xs_tree)
+        carry, y = body(carry, sl)
+        ys.append(y)
+    return carry, jax.tree.map(lambda *xs: jnp.stack(xs), *ys)
+
+
+def _apply_attn_block(cfg, lp, h, positions, window, theta):
+    a_in = nn.apply_norm(lp["norm1"], h, cfg.norm, cfg.norm_eps)
+    h = h + attention.attention(cfg, lp["attn"], a_in, positions,
+                                window=window, rope_theta=theta)
+    f_in = nn.apply_norm(lp["norm2"], h, cfg.norm, cfg.norm_eps)
+    if cfg.num_experts > 0:
+        h = h + moe.apply_moe(cfg, lp["moe"], f_in)
+    elif cfg.d_ff > 0:
+        h = h + nn.apply_mlp(lp["mlp"], f_in, cfg.act, cfg.gated_mlp)
+    return h
+
+
+def _apply_rglru_block(cfg, lp, h, positions):
+    r_in = nn.apply_norm(lp["norm1"], h, cfg.norm, cfg.norm_eps)
+    h = h + rglru.apply_rglru(cfg, lp["rglru"], r_in, positions)
+    f_in = nn.apply_norm(lp["norm2"], h, cfg.norm, cfg.norm_eps)
+    return h + nn.apply_mlp(lp["mlp"], f_in, cfg.act, cfg.gated_mlp)
+
+
+def _apply_ssd_block(cfg, lp, h, positions):
+    s_in = nn.apply_norm(lp["norm1"], h, cfg.norm, cfg.norm_eps)
+    return h + ssd.apply_ssd(cfg, lp["ssd"], s_in, positions)
+
+
+def _encode(cfg: ModelConfig, params, frames):
+    """Whisper encoder over precomputed frame embeddings (frontend stub)."""
+    h = frames.astype(jnp.dtype(cfg.dtype)) + params["enc_pos"][None]
+    positions = jnp.broadcast_to(jnp.arange(h.shape[1]),
+                                 (h.shape[0], h.shape[1]))
+
+    def body(carry, lp):
+        a_in = nn.apply_norm(lp["norm1"], carry, cfg.norm, cfg.norm_eps)
+        carry = carry + attention.attention(
+            cfg, lp["attn"], a_in, positions, window=0, causal=False,
+            rope_theta=0.0)
+        f_in = nn.apply_norm(lp["norm2"], carry, cfg.norm, cfg.norm_eps)
+        carry = carry + nn.apply_mlp(lp["mlp"], f_in, cfg.act,
+                                     cfg.gated_mlp)
+        return carry, None
+
+    h = _scan_or_loop(cfg, body, h, params["encoder"], cfg.encoder_layers)
+    return nn.apply_norm(params["enc_final_norm"], h, cfg.norm,
+                         cfg.norm_eps)
+
+
+def _embed_tokens(cfg: ModelConfig, params, tokens):
+    h = params["embed"][tokens]
+    if cfg.scale_embeddings:
+        h = h * jnp.asarray(math.sqrt(cfg.d_model), h.dtype)
+    return sharding.shard(h, "batch", "seq", "embed")
+
+
+def forward(cfg: ModelConfig, params, batch) -> jax.Array:
+    """Returns final hidden states (B, S, D).
+
+    batch: {"tokens": (B,S) int32} plus modality extras:
+      whisper: {"frames": (B, encoder_seq, D)};
+      vlm: {"patches": (B, num_patches, D)} prepended to the sequence.
+    """
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    h = _embed_tokens(cfg, params, tokens)
+
+    if cfg.frontend == "vision_stub" and "patches" in batch:
+        patches = batch["patches"].astype(h.dtype)
+        h = jnp.concatenate([patches, h], axis=1)
+    Sh = h.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(Sh), (B, Sh))
+
+    if "periods" in params:                       # recurrentgemma
+        def body(carry, lps):
+            r1, r2, at = lps
+            carry = _apply_rglru_block(cfg, r1, carry, positions)
+            carry = _apply_rglru_block(cfg, r2, carry, positions)
+            carry = _apply_attn_block(cfg, at, carry, positions,
+                                      cfg.window, cfg.rope_theta)
+            return carry, None
+
+        n_full = cfg.num_layers // len(cfg.attn_pattern)
+        h = _scan_or_loop(cfg, body, h,
+                          (params["periods"]["r1"], params["periods"]["r2"],
+                           params["periods"]["attn"]), n_full)
+        if "tail" in params:
+            def tbody(carry, lp):
+                return _apply_rglru_block(cfg, lp, carry, positions), None
+            h = _scan_or_loop(cfg, tbody, h, params["tail"],
+                              cfg.num_layers % len(cfg.attn_pattern))
+    elif cfg.attn_pattern == ("ssd",):
+        def body(carry, lp):
+            return _apply_ssd_block(cfg, lp, carry, positions), None
+        h = _scan_or_loop(cfg, body, h, params["blocks"], cfg.num_layers)
+    elif cfg.is_encoder_decoder:
+        enc = _encode(cfg, params, batch["frames"])
+        # per-layer cross kv are computed inside the scan (weights differ)
+        h = h + params["dec_pos"][:Sh][None]
+
+        def body(carry, lp):
+            kv = (jnp.einsum("bsd,dhk->bshk", enc, lp["cross_attn"]["wk"]),
+                  jnp.einsum("bsd,dhk->bshk", enc, lp["cross_attn"]["wv"]))
+            a_in = nn.apply_norm(lp["norm1"], carry, cfg.norm, cfg.norm_eps)
+            carry = carry + attention.attention(
+                cfg, lp["self_attn"], a_in, positions, window=0,
+                rope_theta=0.0)
+            x_in = nn.apply_norm(lp["norm_x"], carry, cfg.norm, cfg.norm_eps)
+            carry = carry + attention.attention(
+                cfg, lp["cross_attn"], x_in, positions, window=0,
+                kv_override=kv)
+            f_in = nn.apply_norm(lp["norm2"], carry, cfg.norm, cfg.norm_eps)
+            carry = carry + nn.apply_mlp(lp["mlp"], f_in, cfg.act,
+                                         cfg.gated_mlp)
+            return carry, None
+
+        h = _scan_or_loop(cfg, body, h, params["decoder"], cfg.num_layers)
+    else:
+        # Uniform attention stack: scan over whole pattern periods so every
+        # sub-layer sees a *static* window/theta (required by the k-band
+        # slicing in blocked attention); remainder layers unrolled.
+        win_py, theta_py = _layer_statics_py(cfg)
+        period = len(cfg.attn_pattern)
+        n_full = cfg.num_layers // period
+        rem = cfg.num_layers % period
+
+        def body(carry, lp_group):
+            for j in range(period):
+                lp = jax.tree.map(lambda x: x[j], lp_group)
+                # per-sub-layer remat: without it the backward of a period
+                # body materializes all `period` layers' residuals at once.
+                blk = (jax.checkpoint(
+                    lambda c, p, jj=j: _apply_attn_block(
+                        cfg, p, c, positions, win_py[jj], theta_py[jj]))
+                    if cfg.remat == "block" and period > 1 else
+                    lambda c, p, jj=j: _apply_attn_block(
+                        cfg, p, c, positions, win_py[jj], theta_py[jj]))
+                carry = blk(carry, lp)
+            return carry, None
+
+        main = jax.tree.map(
+            lambda x: x[:n_full * period].reshape(
+                (n_full, period) + x.shape[1:]), params["blocks"])
+        h = _scan_or_loop(cfg, body, h, main, n_full)
+        for r in range(rem):
+            lp = jax.tree.map(lambda x: x[n_full * period + r],
+                              params["blocks"])
+            h = _apply_attn_block(cfg, lp, h, positions, win_py[r],
+                                  theta_py[r])
+
+    return nn.apply_norm(params["final_norm"], h, cfg.norm, cfg.norm_eps)
+
+
+def _out_table(cfg, params):
+    return params["embed"] if cfg.tie_embeddings else params["unembed"]
+
+
+def logits_fn(cfg: ModelConfig, params, h):
+    out = h @ _out_table(cfg, params).T
+    out = nn.softcap(out, cfg.logits_softcap)
+    return sharding.shard(out, "batch", "seq", "vocab")
+
+
+def loss_fn(cfg: ModelConfig, params, batch) -> jax.Array:
+    """Mean next-token cross-entropy.  Uses sequence-chunked loss when
+    cfg.loss_chunk > 0 (never materializes (B,S,V))."""
+    h = forward(cfg, params, batch)
+    tokens = batch["tokens"]
+    S = tokens.shape[1]
+    if cfg.frontend == "vision_stub" and "patches" in batch:
+        h = h[:, -S:]                      # loss only over the text tail
+    labels = batch.get("labels")
+    if labels is None:
+        labels = jnp.pad(tokens[:, 1:], ((0, 0), (0, 1)))
+    mask = batch.get("mask")
+    if mask is None:
+        mask = jnp.ones(tokens.shape, jnp.float32).at[:, -1].set(0.0)
+    table = _out_table(cfg, params)
+    if cfg.loss_chunk and S % cfg.loss_chunk == 0:
+        return nn.chunked_loss(h, table, labels, cfg.loss_chunk,
+                               cfg.logits_softcap, mask,
+                               unroll=not cfg.scan_layers)
+    logits = logits_fn(cfg, params, h)
+    return nn.cross_entropy(logits, labels, mask)
+
+
+# ---------------------------------------------------------------------------
+# Decode caches + serve step.
+# ---------------------------------------------------------------------------
+
+def init_decode_cache(cfg: ModelConfig, batch: int, max_seq: int,
+                      dtype=None):
+    """Build the (stacked) cache pytree for ``serve_step``."""
+    dtype = dtype or jnp.dtype(cfg.dtype)
+
+    if "rglru" in cfg.attn_pattern and len(set(cfg.attn_pattern)) > 1:
+        period = len(cfg.attn_pattern)
+        n_full = cfg.num_layers // period
+        rem = cfg.num_layers % period
+        spec = attention.CacheSpec("ring", min(cfg.window, max_seq))
+        cache = {
+            "r1": jax.tree.map(lambda x: jnp.stack([x] * n_full),
+                               rglru.init_rglru_cache(cfg, batch, dtype)),
+            "r2": jax.tree.map(lambda x: jnp.stack([x] * n_full),
+                               rglru.init_rglru_cache(cfg, batch, dtype)),
+            "attn": jax.tree.map(
+                lambda x: jnp.stack([x] * n_full),
+                attention.init_cache(cfg, spec, batch, dtype)),
+        }
+        if rem:
+            cache["tail"] = jax.tree.map(
+                lambda x: jnp.stack([x] * rem),
+                rglru.init_rglru_cache(cfg, batch, dtype))
+        return cache
+    if cfg.attn_pattern == ("ssd",):
+        return jax.tree.map(lambda x: jnp.stack([x] * cfg.num_layers),
+                            ssd.init_ssd_cache(cfg, batch, dtype))
+    if cfg.is_encoder_decoder:
+        spec = attention.CacheSpec("full", max_seq)
+        kvh = (batch, cfg.encoder_seq, cfg.num_kv_heads, cfg.head_dim)
+        return {
+            "self": jax.tree.map(
+                lambda x: jnp.stack([x] * cfg.num_layers),
+                attention.init_cache(cfg, spec, batch, dtype)),
+            "cross_k": jnp.zeros((cfg.num_layers,) + kvh, dtype),
+            "cross_v": jnp.zeros((cfg.num_layers,) + kvh, dtype),
+        }
+    # uniform attention stack: per-layer ring/full caches (stacked by kind)
+    caches = []
+    for i in range(cfg.num_layers):
+        spec = attention.cache_spec(cfg, cfg.layer_type(i), max_seq)
+        caches.append(attention.init_cache(cfg, spec, batch, dtype))
+    # stack homogeneous subsets: represent as dict {"full": ..., "ring": ...}
+    # with an index map so the scan can pick per-layer slices.
+    return _stack_mixed_caches(cfg, caches, max_seq)
+
+
+def _cache_layout(cfg: ModelConfig, max_seq: int):
+    kinds = []
+    for i in range(cfg.num_layers):
+        kinds.append(attention.cache_spec(cfg, cfg.layer_type(i),
+                                          max_seq).kind)
+    return tuple(kinds)
+
+
+def _stack_mixed_caches(cfg, caches, max_seq):
+    kinds = _cache_layout(cfg, max_seq)
+    out = {}
+    for kind in ("full", "ring"):
+        idx = [i for i, k in enumerate(kinds) if k == kind]
+        if idx:
+            out[kind] = jax.tree.map(lambda *xs: jnp.stack(xs),
+                                     *[caches[i] for i in idx])
+    return out
+
+
+def serve_step(cfg: ModelConfig, params, cache, tokens, pos):
+    """One decode step.  tokens: (B, 1) int32; pos: scalar int32 absolute
+    position.  Returns (logits (B, 1, V), new_cache)."""
+    B = tokens.shape[0]
+    h = _embed_tokens(cfg, params, tokens)
+    windows, thetas = _layer_statics(cfg)
+
+    if "periods" in params:
+        spec = attention.CacheSpec("ring",
+                                   int(cache["attn"]["k"].shape[2]))
+
+        def body(carry, xs):
+            (r1, r2, at), (c1, c2, ca) = xs
+            carry, n1 = _decode_rglru_block(cfg, r1, c1, carry)
+            carry, n2 = _decode_rglru_block(cfg, r2, c2, carry)
+            carry, na = _decode_attn_block(cfg, at, ca, spec, carry, pos,
+                                           cfg.window, cfg.rope_theta)
+            return carry, (n1, n2, na)
+
+        n_full = cfg.num_layers // len(cfg.attn_pattern)
+        h, (nc1, nc2, nca) = _scan_or_loop_ys(
+            cfg, body, h, ((params["periods"]["r1"],
+                            params["periods"]["r2"],
+                            params["periods"]["attn"]),
+                           (cache["r1"], cache["r2"], cache["attn"])),
+            n_full)
+        new_cache = {"r1": nc1, "r2": nc2, "attn": nca}
+        if "tail" in params:
+            def tbody(carry, xs):
+                lp, c = xs
+                carry, ncl = _decode_rglru_block(cfg, lp, c, carry)
+                return carry, ncl
+            h, nct = _scan_or_loop_ys(
+                cfg, tbody, h, (params["tail"], cache["tail"]),
+                cfg.num_layers % len(cfg.attn_pattern))
+            new_cache["tail"] = nct
+    elif cfg.attn_pattern == ("ssd",):
+        def body(carry, xs):
+            lp, c = xs
+            s_in = nn.apply_norm(lp["norm1"], carry, cfg.norm, cfg.norm_eps)
+            out, ncl = ssd.decode_ssd(cfg, lp["ssd"], c, s_in)
+            return carry + out, ncl
+        h, new_cache = _scan_or_loop_ys(cfg, body, h,
+                                        (params["blocks"], cache),
+                                        cfg.num_layers)
+    elif cfg.is_encoder_decoder:
+        spec = attention.CacheSpec("full", int(cache["self"]["k"].shape[2]))
+        h = h + params["dec_pos"][pos][None, None]
+
+        def body(carry, xs):
+            lp, cs, ck, cv = xs
+            a_in = nn.apply_norm(lp["norm1"], carry, cfg.norm, cfg.norm_eps)
+            out, ncs = attention.decode_attention(
+                cfg, lp["self_attn"], cs, spec, a_in, pos, window=0,
+                rope_theta=0.0)
+            carry = carry + out
+            x_in = nn.apply_norm(lp["norm_x"], carry, cfg.norm, cfg.norm_eps)
+            carry = carry + attention.attention(
+                cfg, lp["cross_attn"], x_in, None, window=0,
+                kv_override=(ck, cv))
+            f_in = nn.apply_norm(lp["norm2"], carry, cfg.norm, cfg.norm_eps)
+            carry = carry + nn.apply_mlp(lp["mlp"], f_in, cfg.act,
+                                         cfg.gated_mlp)
+            return carry, ncs
+
+        h, ncs = _scan_or_loop_ys(
+            cfg, body, h, (params["decoder"], cache["self"],
+                           cache["cross_k"], cache["cross_v"]),
+            cfg.num_layers)
+        new_cache = dict(cache, self=ncs)
+    else:
+        kinds = _cache_layout(cfg, 1 << 30)
+        new_cache = dict(cache)
+        # scan per cache-kind subset, preserving layer order inside each.
+        h, new_cache = _decode_uniform(cfg, params, cache, h, pos, windows,
+                                       thetas, kinds)
+    h = nn.apply_norm(params["final_norm"], h, cfg.norm, cfg.norm_eps)
+    logits = logits_fn(cfg, params, h)
+    return logits, new_cache
+
+
+def _decode_rglru_block(cfg, lp, c, h):
+    r_in = nn.apply_norm(lp["norm1"], h, cfg.norm, cfg.norm_eps)
+    out, nc = rglru.decode_rglru(cfg, lp["rglru"], c, r_in)
+    h = h + out
+    f_in = nn.apply_norm(lp["norm2"], h, cfg.norm, cfg.norm_eps)
+    return h + nn.apply_mlp(lp["mlp"], f_in, cfg.act, cfg.gated_mlp), nc
+
+
+def _decode_attn_block(cfg, lp, c, spec, h, pos, window, theta):
+    a_in = nn.apply_norm(lp["norm1"], h, cfg.norm, cfg.norm_eps)
+    out, nc = attention.decode_attention(cfg, lp["attn"], c, spec, a_in,
+                                         pos, window=window,
+                                         rope_theta=theta)
+    h = h + out
+    f_in = nn.apply_norm(lp["norm2"], h, cfg.norm, cfg.norm_eps)
+    if cfg.num_experts > 0:
+        h = h + moe.apply_moe(cfg, lp["moe"], f_in)
+    elif cfg.d_ff > 0:
+        h = h + nn.apply_mlp(lp["mlp"], f_in, cfg.act, cfg.gated_mlp)
+    return h, nc
+
+
+def _decode_uniform(cfg, params, cache, h, pos, windows, thetas, kinds):
+    """Decode for the uniform attention stack.  Layers whose caches share a
+    kind ("full"/"ring") were stacked together; we scan each subset in turn.
+    Layer order is preserved because interleaved kinds only occur for
+    local:global mixtures where blocks commute per-kind is NOT true — so we
+    instead walk layers grouped but apply them in original order via a
+    permutation-aware scan: for mixed patterns we fall back to a python loop
+    over period groups (bounded: pattern length <= 8)."""
+    if len(set(kinds)) == 1:
+        kind = kinds[0]
+
+        def body(carry, xs):
+            lp, c, w, th = xs
+            spec = attention.CacheSpec(kind, int(cache[kind]["k"].shape[2]))
+            carry, nc = _decode_attn_block(cfg, lp, c, spec, carry, pos, w,
+                                           th)
+            return carry, nc
+
+        h, nc = _scan_or_loop_ys(cfg, body, h,
+                                 (params["blocks"], cache[kind], windows,
+                                  thetas), cfg.num_layers)
+        return h, {kind: nc}
+
+    # Mixed local/global (gemma3): python loop over the pattern period with
+    # static per-layer windows/thetas.
+    win_py, theta_py = _layer_statics_py(cfg)
+    new_cache = {k: jax.tree.map(lambda x: x, v) for k, v in cache.items()}
+    kind_idx = {k: 0 for k in new_cache}
+    for i in range(cfg.num_layers):
+        k = kinds[i]
+        j = kind_idx[k]
+        kind_idx[k] += 1
+        lp = jax.tree.map(lambda x: x[i], params["blocks"])
+        c = jax.tree.map(lambda x: x[j], new_cache[k])
+        spec = attention.CacheSpec(k, int(cache[k]["k"].shape[2]))
+        h, nc = _decode_attn_block(cfg, lp, c, spec, h, pos,
+                                   win_py[i], theta_py[i])
+        new_cache[k] = jax.tree.map(
+            lambda full, upd, jj=j: full.at[jj].set(upd), new_cache[k], nc)
+    return h, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Prefill.
+# ---------------------------------------------------------------------------
+
+def prefill(cfg: ModelConfig, params, batch, max_seq: int | None = None):
+    """Run the trunk over a prompt and build decode caches.
+
+    Returns (logits_last (B, V), cache).  Implemented for the uniform
+    attention stack, mamba2, recurrentgemma and whisper.
+    """
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    h = _embed_tokens(cfg, params, tokens)
+    if cfg.frontend == "vision_stub" and "patches" in batch:
+        h = jnp.concatenate([batch["patches"].astype(h.dtype), h], axis=1)
+    S = h.shape[1]                      # includes prepended patches
+    max_seq = max_seq or S
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    windows, thetas = _layer_statics(cfg)
+
+    if cfg.attn_pattern == ("ssd",):
+        def body(carry, lp):
+            s_in = nn.apply_norm(lp["norm1"], carry, cfg.norm, cfg.norm_eps)
+            out, st = _ssd_prefill(cfg, lp["ssd"], s_in)
+            return carry + out, st
+        h, new_cache = _scan_or_loop_ys(cfg, body, h, params["blocks"],
+                                        cfg.num_layers)
+    elif "periods" in params:
+        spec = attention.CacheSpec("ring", min(cfg.window, max_seq))
+
+        def body(carry, lps):
+            r1, r2, at = lps
+            carry, c1 = _rglru_prefill_block(cfg, r1, carry, positions)
+            carry, c2 = _rglru_prefill_block(cfg, r2, carry, positions)
+            carry, ca = _attn_prefill_block(cfg, at, carry, positions, spec,
+                                            cfg.window, cfg.rope_theta)
+            return carry, (c1, c2, ca)
+
+        h, (c1, c2, ca) = _scan_or_loop_ys(
+            cfg, body, h, (params["periods"]["r1"], params["periods"]["r2"],
+                           params["periods"]["attn"]),
+            cfg.num_layers // len(cfg.attn_pattern))
+        new_cache = {"r1": c1, "r2": c2, "attn": ca}
+        if "tail" in params:
+            def tbody(carry, lp):
+                carry, c = _rglru_prefill_block(cfg, lp, carry, positions)
+                return carry, c
+            h, ct = _scan_or_loop_ys(cfg, tbody, h, params["tail"],
+                                     cfg.num_layers % len(cfg.attn_pattern))
+            new_cache["tail"] = ct
+    elif cfg.is_encoder_decoder:
+        enc = _encode(cfg, params, batch["frames"])
+        spec = attention.CacheSpec("full", max_seq)
+        h = h + params["dec_pos"][:S][None]
+
+        def body(carry, lp):
+            kv = (jnp.einsum("bsd,dhk->bshk", enc, lp["cross_attn"]["wk"]),
+                  jnp.einsum("bsd,dhk->bshk", enc, lp["cross_attn"]["wv"]))
+            a_in = nn.apply_norm(lp["norm1"], carry, cfg.norm, cfg.norm_eps)
+            k = jnp.einsum("bsd,dhk->bshk", a_in, lp["self_attn"]["wk"])
+            v = jnp.einsum("bsd,dhk->bshk", a_in, lp["self_attn"]["wv"])
+            carry = carry + attention.attention(
+                cfg, lp["self_attn"], a_in, positions, window=0,
+                rope_theta=0.0)
+            cache_l = attention.prefill_cache(cfg, spec, k, v,
+                                              jnp.arange(S))
+            x_in = nn.apply_norm(lp["norm_x"], carry, cfg.norm, cfg.norm_eps)
+            carry = carry + attention.attention(
+                cfg, lp["cross_attn"], x_in, positions, window=0,
+                kv_override=kv)
+            f_in = nn.apply_norm(lp["norm2"], carry, cfg.norm, cfg.norm_eps)
+            carry = carry + nn.apply_mlp(lp["mlp"], f_in, cfg.act,
+                                         cfg.gated_mlp)
+            return carry, (cache_l, kv[0], kv[1])
+
+        h, (cs, ck, cv) = _scan_or_loop_ys(cfg, body, h,
+                                           params["decoder"],
+                                           cfg.num_layers)
+        new_cache = {"self": cs, "cross_k": ck, "cross_v": cv}
+    else:
+        # mixed kinds need per-kind stacking; do the simple uniform case via
+        # scan and the mixed case via python loop.
+        kinds = _cache_layout(cfg, max_seq)
+        if len(set(kinds)) == 1:
+            spec = attention.cache_spec(cfg, cfg.layer_type(0), max_seq)
+
+            def body1(carry, xs):
+                lp, w, th = xs
+                carry, c = _attn_prefill_block(cfg, lp, carry, positions,
+                                               spec, w, th)
+                return carry, c
+
+            h, nc = _scan_or_loop_ys(cfg, body1, h,
+                                     (params["blocks"], windows, thetas),
+                                     cfg.num_layers)
+            new_cache = {kinds[0]: nc}
+        else:
+            win_py, theta_py = _layer_statics_py(cfg)
+            per_kind = {k: [] for k in set(kinds)}
+            for i in range(cfg.num_layers):
+                lp = jax.tree.map(lambda x: x[i], params["blocks"])
+                spec = attention.cache_spec(cfg, cfg.layer_type(i), max_seq)
+                h, c = _attn_prefill_block(cfg, lp, h, positions, spec,
+                                           win_py[i], theta_py[i])
+                per_kind[kinds[i]].append(c)
+            new_cache = {k: jax.tree.map(lambda *xs: jnp.stack(xs), *v)
+                         for k, v in per_kind.items()}
+
+    h = nn.apply_norm(params["final_norm"], h, cfg.norm, cfg.norm_eps)
+    logits = logits_fn(cfg, params, h[:, -1:, :])
+    return logits[:, 0], new_cache
+
+
+def _attn_prefill_block(cfg, lp, h, positions, spec, window, theta):
+    a_in = nn.apply_norm(lp["norm1"], h, cfg.norm, cfg.norm_eps)
+    q = jnp.einsum("bsd,dhk->bshk", a_in, lp["attn"]["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", a_in, lp["attn"]["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", a_in, lp["attn"]["wv"])
+    if not (isinstance(theta, (int, float)) and theta <= 0):
+        q = nn.rope(q, positions, theta)
+        k = nn.rope(k, positions, theta)
+    import math as _m
+    kk = attention._expand_kv(k, cfg.q_per_kv)
+    vv = attention._expand_kv(v, cfg.q_per_kv)
+    scale = 1.0 / _m.sqrt(cfg.head_dim)
+    scores = (jnp.einsum("bqhk,bshk->bhqs", q, kk).astype(jnp.float32)
+              * scale)
+    if cfg.attn_softcap > 0:
+        scores = nn.softcap(scores, cfg.attn_softcap)
+    scores = scores + attention._mask(q.shape[1], kk.shape[1], window, True)
+    probs = jax.nn.softmax(scores, axis=-1).astype(vv.dtype)
+    out = jnp.einsum("bhqs,bshk->bqhk", probs, vv)
+    out = jnp.einsum("bshk,hkd->bsd", out, lp["attn"]["wo"])
+    h = h + out
+    f_in = nn.apply_norm(lp["norm2"], h, cfg.norm, cfg.norm_eps)
+    if cfg.num_experts > 0:
+        h = h + moe.apply_moe(cfg, lp["moe"], f_in)
+    elif cfg.d_ff > 0:
+        h = h + nn.apply_mlp(lp["mlp"], f_in, cfg.act, cfg.gated_mlp)
+    cache = attention.prefill_cache(cfg, spec, k, v,
+                                    jnp.arange(positions.shape[1]))
+    return h, cache
+
+
+def _rglru_prefill_block(cfg, lp, h, positions):
+    r_in = nn.apply_norm(lp["norm1"], h, cfg.norm, cfg.norm_eps)
+    out, st = _rglru_prefill(cfg, lp["rglru"], r_in)
+    h = h + out
+    f_in = nn.apply_norm(lp["norm2"], h, cfg.norm, cfg.norm_eps)
+    return h + nn.apply_mlp(lp["mlp"], f_in, cfg.act, cfg.gated_mlp), st
+
+
+def _rglru_prefill(cfg, params, x):
+    """Like apply_rglru but also returns the decode cache."""
+    B, S, D = x.shape
+    gate = jax.nn.gelu(x @ params["w_in_gate"], approximate=True)
+    rec = x @ params["w_in_rec"]
+    conv = params["conv_w"]
+    width = conv.shape[0]
+    rec_pad = jnp.pad(rec, ((0, 0), (width - 1, 0), (0, 0)))
+    rec_c = sum(rec_pad[:, i:i + S, :] * conv[i] for i in range(width))
+    rec_c = rec_c + params["conv_b"]
+    a, b_scale = rglru._decay(params, rec_c)
+    hseq = rglru.rglru_scan_ref(
+        a.astype(jnp.float32),
+        (b_scale * jax.nn.sigmoid(params["gate_x"]) * rec_c
+         ).astype(jnp.float32))
+    out = (hseq.astype(x.dtype) * gate) @ params["w_out"]
+    cache = {"h": hseq[:, -1].astype(jnp.float32),
+             "conv": rec[:, -(width - 1):, :]}
+    return out, cache
+
+
+def _ssd_prefill(cfg, params, x):
+    """apply_ssd + final (conv_state, ssm_state) for decode."""
+    B_, S, D = x.shape
+    di = cfg.ssm_expand * D
+    nh = di // cfg.ssm_headdim
+    g, N = cfg.ssm_ngroups, cfg.ssm_state
+
+    zxbcdt = x @ params["in_proj"]
+    z, xs, Bm, Cm, dt = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + g * N, 2 * di + 2 * g * N], axis=-1)
+    xbc = jnp.concatenate([xs, Bm, Cm], axis=-1)
+    width = cfg.ssm_conv
+    conv_state = xbc[:, -(width - 1):, :]
+    pad = jnp.pad(xbc, ((0, 0), (width - 1, 0), (0, 0)))
+    conv = sum(pad[:, i:i + S, :] * params["conv_w"][i]
+               for i in range(width)) + params["conv_b"]
+    conv = jax.nn.silu(conv)
+    xs, Bm, Cm = jnp.split(conv, [di, di + g * N], axis=-1)
+    dt = jax.nn.softplus(dt + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    xh = xs.reshape(B_, S, nh, cfg.ssm_headdim)
+    y, state = ssd_forward_with_state(
+        xh.astype(jnp.float32), dt.astype(jnp.float32), A,
+        Bm.reshape(B_, S, g, N).astype(jnp.float32),
+        Cm.reshape(B_, S, g, N).astype(jnp.float32),
+        min(cfg.ssm_chunk, S))
+    y = y.astype(x.dtype) + xh * params["D"][None, None, :, None]
+    y = y.reshape(B_, S, di)
+    y = nn.rms_norm(y * jax.nn.silu(z), params["norm"], cfg.norm_eps)
+    out = y @ params["out_proj"]
+    return out, {"conv": conv_state, "state": state}
+
+
+def ssd_forward_with_state(x, dt, A, B, C, chunk):
+    """ssd_ref variant that also returns the final ssm state
+    (b, nh, N, hd) — shares all math with repro.models.ssd.ssd_ref."""
+    b, s, nh, hd = x.shape
+    g, N = B.shape[2], B.shape[3]
+    nc = s // chunk
+    rep = nh // g
+    xc = x.reshape(b, nc, chunk, nh, hd)
+    dtc = dt.reshape(b, nc, chunk, nh)
+    Bc = jnp.repeat(B.reshape(b, nc, chunk, g, N), rep, axis=3)
+    Cc = jnp.repeat(C.reshape(b, nc, chunk, g, N), rep, axis=3)
+    dA = dtc * A
+    cum = jnp.cumsum(dA, axis=2)
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    L = jnp.where(mask[None, None, :, :, None], jnp.exp(diff), 0.0)
+    CB = jnp.einsum("bclhn,bcmhn->bclmh", Cc, Bc)
+    y_intra = jnp.einsum("bclmh,bclmh,bcmh,bcmhp->bclhp", CB, L, dtc, xc)
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)
+    S_ = jnp.einsum("bclh,bclh,bclhn,bclhp->bchnp", decay_to_end, dtc, Bc,
+                    xc)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])
+
+    def scan_fn(Sprev, inp):
+        Sc, dec = inp
+        return dec[:, :, None, None] * Sprev + Sc, Sprev
+
+    S_t = jnp.moveaxis(S_, 1, 0)
+    dec_t = jnp.moveaxis(chunk_decay, 1, 0)
+    final, Sprev_t = jax.lax.scan(scan_fn, jnp.zeros_like(S_t[0]),
+                                  (S_t, dec_t))
+    Sprev = jnp.moveaxis(Sprev_t, 0, 1)
+    decay_from_start = jnp.exp(cum)
+    y_inter = jnp.einsum("bclhn,bclh,bchnp->bclhp", Cc, decay_from_start,
+                         Sprev)
+    y = (y_intra + y_inter).reshape(b, s, nh, hd)
+    # final: (b, nh, N, hd) in our layout (N before hd after einsum bchnp)
+    return y, final

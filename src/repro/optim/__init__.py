@@ -1,0 +1,4 @@
+"""Optimizers, LR schedules, gradient clipping/accumulation/compression."""
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_step  # noqa
+from repro.optim.schedule import make_schedule  # noqa: F401
+from repro.optim import compress  # noqa: F401

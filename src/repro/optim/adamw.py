@@ -1,0 +1,75 @@
+"""AdamW with decoupled weight decay, global-norm clipping and f32 master
+moments (params may be bf16; moments are always f32, the standard
+mixed-precision layout whose sharding follows the parameter specs)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    accum_steps: int = 1     # gradient accumulation (microbatching)
+
+
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+def adamw_step(cfg: AdamWConfig, grads, opt_state, params,
+               lr: jax.Array | float | None = None):
+    """One AdamW update.  Returns (new_params, new_opt_state, grad_norm)."""
+    lr = cfg.lr if lr is None else lr
+    grads, norm = clip_by_global_norm(grads, cfg.clip_norm)
+    step = opt_state["step"] + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - cfg.b1 ** t
+    bc2 = 1.0 - cfg.b2 ** t
+
+    def upd(g, m, v, p):
+        g32 = g.astype(jnp.float32)
+        m_new = cfg.b1 * m + (1.0 - cfg.b1) * g32
+        v_new = cfg.b2 * v + (1.0 - cfg.b2) * g32 * g32
+        mhat = m_new / bc1
+        vhat = v_new / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        p_new = p.astype(jnp.float32) - lr * delta
+        return p_new.astype(p.dtype), m_new, v_new
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(opt_state["m"])
+    flat_v = treedef.flatten_up_to(opt_state["v"])
+    out = [upd(g, m, v, p)
+           for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "step": step}, norm

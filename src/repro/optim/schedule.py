@@ -1,0 +1,28 @@
+"""Learning-rate schedules (linear warmup + cosine/linear/constant decay)."""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+
+def make_schedule(kind: str, peak_lr: float, warmup_steps: int,
+                  total_steps: int, final_frac: float = 0.1):
+    """Returns step -> lr (jnp-traceable)."""
+
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / jnp.maximum(warmup_steps, 1)
+        frac = jnp.clip((step - warmup_steps)
+                        / jnp.maximum(total_steps - warmup_steps, 1), 0.0,
+                        1.0)
+        if kind == "cosine":
+            decay = peak_lr * (final_frac + (1 - final_frac)
+                               * 0.5 * (1 + jnp.cos(math.pi * frac)))
+        elif kind == "linear":
+            decay = peak_lr * (1.0 - (1 - final_frac) * frac)
+        else:
+            decay = jnp.asarray(peak_lr)
+        return jnp.where(step < warmup_steps, warm, decay)
+
+    return fn

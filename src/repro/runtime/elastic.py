@@ -1,0 +1,65 @@
+"""Elastic scaling: resume a run on a different device population.
+
+Checkpoints are mesh-agnostic (checkpoint/manager stores full logical
+arrays), so scaling is: build the new mesh -> recompute PartitionSpecs ->
+``restore_pytree`` with the new NamedShardings -> continue.  The global
+batch is re-split over the new data-parallel width; the DyDD data balancer
+re-plans on the new ring automatically (its topology is a constructor
+argument).
+
+``remesh`` below is the single entry point; it is exercised in tests by
+saving under a (2,2) forced-host mesh and restoring under (4,1)/(1,2).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import NamedSharding
+
+from repro.checkpoint import manager as ckpt
+from repro.models import transformer
+from repro.models.config import ModelConfig
+from repro.runtime import steps as steps_mod
+
+
+def named_shardings(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+
+
+def remesh(cfg: ModelConfig, checkpoint_dir: str, new_mesh,
+           dtype=None):
+    """Restore (params, opt_state, metadata) re-sharded onto ``new_mesh``.
+
+    Returns (params, opt_state, manifest). Raises FileNotFoundError if no
+    valid checkpoint exists (caller then cold-starts).
+    """
+    with jax.sharding.set_mesh(new_mesh):
+        shapes = {
+            "params": transformer.param_shapes(cfg, dtype=dtype),
+        }
+        pspecs = transformer.param_specs(cfg)
+        ospecs = steps_mod.opt_specs(cfg)
+        import jax.numpy as jnp
+        opt_shapes = {
+            "m": jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32),
+                shapes["params"]),
+            "v": jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32),
+                shapes["params"]),
+            "step": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+        like = {"params": shapes["params"], "opt": opt_shapes}
+        shard_tree = {
+            "params": named_shardings(new_mesh, pspecs),
+            "opt": named_shardings(new_mesh, ospecs),
+        }
+        path = ckpt.latest_checkpoint(checkpoint_dir)
+        if path is None:
+            raise FileNotFoundError(checkpoint_dir)
+        tree, manifest = ckpt.restore_pytree(path, like=like,
+                                             shardings=shard_tree)
+    return tree["params"], tree["opt"], manifest

@@ -1,0 +1,182 @@
+"""jit'd step factories: train / prefill / serve, with production shardings.
+
+``make_train_step`` builds the pjit-compiled update with:
+  * parameter/optimizer shardings from ``transformer.param_specs`` (FSDP on
+    'data', TP on 'model' — DESIGN.md §8),
+  * batch sharded over ('pod','data'),
+  * donated params/opt (in-place update, halves peak memory),
+  * optional gradient accumulation (scan over microbatches),
+  * per-block remat via cfg.remat (set in the arch configs).
+
+XLA/GSPMD inserts and overlaps the FSDP all-gathers and the gradient
+reduce-scatters; the §Perf iterations in EXPERIMENTS.md work on this
+schedule via the sharding rules and cfg knobs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import transformer
+from repro.models.config import ModelConfig
+from repro.optim import adamw
+from repro.runtime import sharding
+
+
+_BATCH_AXES = {
+    "tokens": ("batch", "seq"),
+    "labels": ("batch", "seq"),
+    "mask": ("batch", "seq"),
+    "frames": ("batch", "seq", "embed"),
+    "patches": ("batch", "seq", "embed"),
+}
+
+
+def batch_specs(cfg: ModelConfig, batch_shapes: dict):
+    """Shape-aware PartitionSpecs for an input batch dict."""
+    with sharding.profile(cfg.sharding_profile):
+        return {name: sharding.act_spec_shaped(s.shape, *_BATCH_AXES[name])
+                for name, s in batch_shapes.items()}
+
+
+def opt_specs(cfg: ModelConfig):
+    pspec = transformer.param_specs(cfg)
+    return {"m": pspec, "v": pspec, "step": P()}
+
+
+def cache_specs_tree(cfg: ModelConfig, cache_shapes):
+    """PartitionSpecs for a decode cache: batch dim over ('pod','data'),
+    kv-head dim over 'model' where present (shape-aware fallbacks)."""
+    def spec_for(path, leaf):
+        name = str(path[-1].key) if hasattr(path[-1], "key") else ""
+        nd = len(leaf.shape)
+        if name == "pos":
+            return P()
+        if name in ("k", "v", "cross_k", "cross_v"):
+            # (L, B, S, KV, D) stacked / (B, S, KV, D) unstacked.
+            # Prefer kv-head TP; fall back to *sequence sharding* of the
+            # cache when kv heads don't divide the model axis (MQA/GQA<16,
+            # whisper's 20 heads) — the long-context decode memory fix
+            # (EXPERIMENTS.md §Perf): softmax over the sharded key axis is
+            # handled by GSPMD with a cheap scalar all-reduce.
+            axes = (None, "batch", None, "kv_heads", None) if nd == 5 \
+                else ("batch", None, "kv_heads", None)
+            spec = sharding.act_spec_shaped(leaf.shape, *axes)
+            kv_dim = 3 if nd == 5 else 2
+            if spec[kv_dim] is None:
+                axes = (None, "batch", "kv_seq", None, None) if nd == 5 \
+                    else ("batch", "kv_seq", None, None)
+                spec = sharding.act_spec_shaped(leaf.shape, *axes)
+            return spec
+        # recurrent states: (L, B, ...) — batch-shard only
+        axes = [None, "batch"] + [None] * (nd - 2)
+        return sharding.act_spec_shaped(leaf.shape, *axes)
+
+    with sharding.profile(cfg.sharding_profile):
+        return jax.tree_util.tree_map_with_path(spec_for, cache_shapes)
+
+
+def make_loss_fn(cfg: ModelConfig):
+    def loss(params, batch):
+        with sharding.profile(cfg.sharding_profile):
+            return transformer.loss_fn(cfg, params, batch)
+    return loss
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: adamw.AdamWConfig,
+                    lr_schedule=None, mesh=None, donate: bool = True,
+                    batch_shapes: dict | None = None):
+    """Returns train_step(params, opt_state, batch) -> (loss, params, opt).
+
+    When ``mesh`` is provided the function is jitted with explicit
+    in/out_shardings (the dry-run path; ``batch_shapes`` — a dict of
+    ShapeDtypeStructs — is then required for shape-aware batch specs);
+    otherwise plain jit (tests).
+    """
+    loss_fn = make_loss_fn(cfg)
+    accum = opt_cfg.accum_steps
+
+    def step(params, opt_state, batch):
+        lr = (lr_schedule(opt_state["step"]) if lr_schedule is not None
+              else opt_cfg.lr)
+        if accum > 1:
+            # microbatch scan over the leading batch split
+            def micro(carry, mb):
+                g_acc, l_acc = carry
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                return (jax.tree.map(jnp.add, g_acc, g), l_acc + l), None
+
+            mbatch = jax.tree.map(
+                lambda x: x.reshape((accum, x.shape[0] // accum)
+                                    + x.shape[1:]), batch)
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss_sum), _ = jax.lax.scan(micro, (zeros, 0.0), mbatch)
+            grads = jax.tree.map(lambda g: g / accum, grads)
+            loss = loss_sum / accum
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        if mesh is not None:
+            # Pin gradient shardings to the parameter specs so XLA emits
+            # reduce-scatters into the FSDP layout instead of full
+            # all-reduces (PERF-A1 in EXPERIMENTS.md §Perf).
+            gspec = transformer.param_specs(cfg)
+            grads = jax.tree.map(
+                lambda g, s: jax.lax.with_sharding_constraint(g, s),
+                grads, gspec)
+        new_params, new_opt, gnorm = adamw.adamw_step(
+            opt_cfg, grads, opt_state, params, lr=lr)
+        return loss, new_params, new_opt
+
+    if mesh is None:
+        return jax.jit(step, donate_argnums=(0, 1) if donate else ())
+
+    pspec = transformer.param_specs(cfg)
+    ospec = opt_specs(cfg)
+    bspec = batch_specs(cfg, batch_shapes)
+    return jax.jit(
+        step,
+        in_shardings=(pspec, ospec, bspec),
+        out_shardings=(P(), pspec, ospec),
+        donate_argnums=(0, 1) if donate else ())
+
+
+def make_prefill_step(cfg: ModelConfig, mesh=None, max_seq: int | None
+                      = None, batch_shapes: dict | None = None):
+    def step(params, batch):
+        with sharding.profile(cfg.sharding_profile):
+            return transformer.prefill(cfg, params, batch,
+                                       max_seq=max_seq)
+
+    if mesh is None:
+        return jax.jit(step)
+    pspec = transformer.param_specs(cfg)
+    bspec = batch_specs(cfg, batch_shapes)
+    return jax.jit(step, in_shardings=(pspec, bspec),
+                   out_shardings=None)
+
+
+def make_serve_step(cfg: ModelConfig, mesh=None, cache_shapes=None,
+                    donate: bool = True):
+    def step(params, cache, tokens, pos):
+        with sharding.profile(cfg.sharding_profile):
+            return transformer.serve_step(cfg, params, cache, tokens, pos)
+
+    if mesh is None:
+        return jax.jit(step, donate_argnums=(1,) if donate else ())
+    pspec = transformer.param_specs(cfg)
+    cspec = cache_specs_tree(cfg, cache_shapes)
+    B = jax.tree.leaves(cache_shapes)[0].shape[1]
+    with sharding.profile(cfg.sharding_profile):
+        tspec = sharding.act_spec_shaped((B, 1), "batch", None)
+        lspec = sharding.act_spec_shaped((B, 1, cfg.vocab_size), "batch",
+                                         None, "vocab")
+    return jax.jit(
+        step,
+        in_shardings=(pspec, cspec, tspec, P()),
+        out_shardings=(lspec, cspec),
+        donate_argnums=(1,) if donate else ())

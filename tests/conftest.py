@@ -1,0 +1,10 @@
+import os
+import sys
+
+# Tests see the single real CPU device (the 512-device flag is ONLY set
+# inside launch/dryrun.py, per the dry-run contract).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", True)

@@ -1,0 +1,106 @@
+"""Generic balancer API + the DyDD-balanced data pipeline (DESIGN.md §4)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import balance, dydd
+from repro.data import pipeline, observations
+
+
+def test_topology_ring_neighbours():
+    topo = balance.Topology.ring(6)
+    assert topo.neighbours(0) == [1, 5]
+    assert topo.neighbours(3) == [2, 4]
+
+
+def test_plan_moves_are_neighbour_only():
+    topo = balance.Topology.ring(8)
+    loads = np.array([100, 0, 0, 0, 0, 0, 0, 0])
+    plan = balance.plan(loads, topo, max_rounds=32)
+    edge_set = {frozenset(e) for e in topo.edges}
+    for src, dst, cnt in plan.moves:
+        assert frozenset((src, dst)) in edge_set
+        assert cnt > 0
+    assert plan.loads_after.sum() == 100
+    assert plan.efficiency > 0.5
+
+
+@settings(max_examples=40, deadline=None)
+@given(p=st.integers(2, 16), seed=st.integers(0, 10_000))
+def test_plan_conservation_and_improvement(p, seed):
+    rng = np.random.default_rng(seed)
+    loads = rng.integers(0, 1000, p)
+    topo = balance.Topology.ring(p)
+    plan = balance.plan(loads, topo)
+    assert plan.loads_after.sum() == loads.sum()
+    assert plan.efficiency >= dydd.balance_ratio(loads) - 1e-12
+
+
+def test_synthetic_corpus_heavy_tail_deterministic():
+    docs1 = pipeline.synthetic_corpus(100, 1000, seed=7)
+    docs2 = pipeline.synthetic_corpus(100, 1000, seed=7)
+    assert all((a.tokens == b.tokens).all() for a, b in zip(docs1, docs2))
+    lens = np.array([len(d.tokens) for d in docs1])
+    assert lens.std() > 0.3 * lens.mean()   # genuinely heavy-tailed
+
+
+def test_pack_documents_masks_padding():
+    docs = pipeline.synthetic_corpus(10, 100, seed=0, mean_len=20,
+                                     max_len=40)
+    toks, labs, mask = pipeline.pack_documents(docs, batch=4, seq=64)
+    assert toks.shape == labs.shape == mask.shape == (4, 64)
+    # labels are next-token shifted
+    np.testing.assert_array_equal(labs[:, :-1], toks[:, 1:])
+    assert 0 < mask.sum() <= 4 * 64
+
+
+def test_balanced_loader_improves_efficiency():
+    ld = pipeline.BalancedLoader(vocab_size=1000, dp=8, batch_per_shard=2,
+                                 seq=256, seed=0, balance=True)
+    toks, labs, mask = ld.next_batch()
+    assert toks.shape == (16, 256)
+    st = ld.last_stats
+    assert st.efficiency_after >= st.efficiency_before
+    assert st.loads_after.sum() == st.loads_before.sum()
+
+
+def test_balanced_loader_beats_unbalanced_on_average():
+    kw = dict(vocab_size=1000, dp=8, batch_per_shard=2, seq=256, seed=3)
+    bal = pipeline.BalancedLoader(balance=True, **kw)
+    unb = pipeline.BalancedLoader(balance=False, **kw)
+    e_b, e_u = [], []
+    for _ in range(5):
+        bal.next_batch()
+        unb.next_batch()
+        e_b.append(bal.last_stats.efficiency_after)
+        e_u.append(unb.last_stats.efficiency_after)
+    assert np.mean(e_b) > np.mean(e_u)
+
+
+def test_loader_state_restart_determinism():
+    kw = dict(vocab_size=500, dp=4, batch_per_shard=2, seq=128, seed=11)
+    a = pipeline.BalancedLoader(**kw)
+    for _ in range(3):
+        a.next_batch()
+    state = a.state_dict()
+    want = a.next_batch()
+    b = pipeline.BalancedLoader(**kw)
+    b.load_state_dict(state)
+    got = b.next_batch()
+    for x, y in zip(want, got):
+        np.testing.assert_array_equal(x, y)
+
+
+def test_observation_generators():
+    for kind in ("uniform", "beta", "clustered"):
+        obs = observations.make_observations(500, kind=kind, seed=1)
+        assert obs.shape == (500,)
+        assert (obs >= 0).all() and (obs < 1).all()
+
+
+def test_observation_empty_subdomains():
+    obs = observations.make_observations(
+        1000, kind="uniform", seed=2, empty_subdomains=(0, 1), p=4)
+    counts = np.histogram(obs, bins=4, range=(0, 1))[0]
+    assert counts[0] == 0 and counts[1] == 0
+    assert counts[2] + counts[3] == 1000

@@ -1,0 +1,85 @@
+"""CLS model + Kalman filter: the paper's reference solvers (§2-3)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import cls, kalman
+
+
+@pytest.fixture(scope="module")
+def prob():
+    return cls.random_problem(jax.random.PRNGKey(0), n=48, m0=64, m1=80)
+
+
+def test_normal_equations_solve_minimizes(prob):
+    x = cls.solve(prob)
+    j0 = cls.objective(prob, x)
+    # any perturbation increases J (SPD normal matrix)
+    for seed in range(3):
+        d = 1e-3 * jax.random.normal(jax.random.PRNGKey(seed), (prob.n,),
+                                     jnp.float64)
+        assert cls.objective(prob, x + d) > j0
+
+
+def test_gradient_zero_at_solution(prob):
+    x = cls.solve(prob)
+    g = jax.grad(lambda v: cls.objective(prob, v))(x)
+    np.testing.assert_allclose(np.asarray(g), 0.0, atol=1e-8)
+
+
+def test_cg_matches_cholesky(prob):
+    x_chol = cls.solve(prob)
+    x_cg = cls.solve_cg(prob)
+    np.testing.assert_allclose(np.asarray(x_cg), np.asarray(x_chol),
+                               atol=1e-8)
+
+
+def test_kf_sequential_equals_direct(prob):
+    """The paper's KF-on-CLS reference: sequential assimilation of the
+    observation rows reaches the CLS solution (error ~ 1e-11, §6)."""
+    x_direct = cls.solve(prob)
+    x_kf = kalman.solve_cls_sequential(prob, block=1)
+    assert float(jnp.linalg.norm(x_kf - x_direct)) < 1e-9
+
+
+def test_kf_blocked_assimilation(prob):
+    x_direct = cls.solve(prob)
+    x_kf = kalman.solve_cls_sequential(prob, block=8)
+    assert float(jnp.linalg.norm(x_kf - x_direct)) < 1e-9
+
+
+def test_kf_predict_correct_shapes():
+    n, m = 8, 5
+    st = kalman.KFState(x=jnp.zeros(n), P=jnp.eye(n))
+    M = 0.9 * jnp.eye(n)
+    Q = 0.01 * jnp.eye(n)
+    st = kalman.predict(st, M, Q)
+    H = jnp.ones((m, n)) / n
+    st = kalman.correct(st, H, jnp.ones(m), jnp.ones(m))
+    assert st.x.shape == (n,) and st.P.shape == (n, n)
+    # covariance stays symmetric PSD-ish
+    np.testing.assert_allclose(np.asarray(st.P), np.asarray(st.P.T),
+                               atol=1e-10)
+
+
+def test_kf_run_scan():
+    n, m, r = 6, 4, 5
+    key = jax.random.PRNGKey(1)
+    Ms = jnp.stack([0.95 * jnp.eye(n)] * r)
+    Qs = jnp.stack([0.01 * jnp.eye(n)] * r)
+    Hs = jax.random.normal(key, (r, m, n), jnp.float64)
+    ys = jnp.ones((r, m))
+    Rs = jnp.ones((r, m))
+    final, xs = kalman.run(jnp.zeros(n), jnp.eye(n), Ms, Qs, Hs, ys, Rs)
+    assert xs.shape == (r, n)
+    assert not bool(jnp.any(jnp.isnan(final.x)))
+
+
+def test_local_problem_is_spatially_local():
+    obs = np.linspace(0.05, 0.3, 20)  # all obs in the left third
+    prob = cls.local_problem(jax.random.PRNGKey(0), 64, obs)
+    H1 = np.asarray(prob.H1)
+    # every H1 row's support lies in the left half of the columns
+    nz = np.nonzero(H1)[1]
+    assert nz.max() < 32

@@ -1,0 +1,104 @@
+"""DD-CLS Schwarz iteration (paper §4) and DD-KF (the distributed solve)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import cls, dd, ddkf, dydd
+
+
+@pytest.fixture(scope="module")
+def local_prob():
+    rng = np.random.default_rng(0)
+    obs = rng.beta(2.0, 5.0, 300)
+    return cls.local_problem(jax.random.PRNGKey(0), 96, obs), obs
+
+
+def test_reduction_extension_roundtrip():
+    w = jnp.arange(1.0, 6.0)
+    idx = jnp.asarray([1, 3, 4])
+    r = dd.restrict_vec(w, idx)
+    e = dd.extend_vec(r, idx, 5)
+    np.testing.assert_array_equal(np.asarray(e), [0, 2, 0, 4, 5])
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=st.integers(8, 64), seed=st.integers(0, 10_000))
+def test_extend_restrict_identity(n, seed):
+    rng = np.random.default_rng(seed)
+    idx = jnp.asarray(np.sort(rng.choice(n, size=max(1, n // 3),
+                                         replace=False)))
+    w = jnp.asarray(rng.normal(size=len(idx)))
+    assert np.allclose(dd.restrict_vec(dd.extend_vec(w, idx, n), idx), w)
+
+
+def test_decompose_1d_partitions_columns():
+    dec = dd.decompose_1d(60, dd.uniform_boundaries(4), overlap=0)
+    cols = np.concatenate([np.asarray(c) for c in dec.col_sets])
+    np.testing.assert_array_equal(np.sort(cols), np.arange(60))
+
+
+def test_decompose_1d_overlap_sets():
+    dec = dd.decompose_1d(60, dd.uniform_boundaries(3), overlap=2)
+    ovs = dec.overlap_sets()
+    assert all(len(o) == 4 for o in ovs)   # 2 donated from each side
+
+
+def test_multiplicative_schwarz_converges_to_cls(local_prob):
+    prob, _ = local_prob
+    x_direct = cls.solve(prob)
+    for p in (2, 4):
+        dec = dd.decompose_1d(prob.n, dd.uniform_boundaries(p))
+        sol = dd.SchwarzSolver(prob, dec)
+        x, iters, _ = sol.solve(iters=200, mode="multiplicative")
+        assert float(jnp.linalg.norm(x - x_direct)) < 1e-9, (p, iters)
+
+
+def test_additive_schwarz_converges_on_local_problem(local_prob):
+    prob, _ = local_prob
+    x_direct = cls.solve(prob)
+    dec = dd.decompose_1d(prob.n, dd.uniform_boundaries(4))
+    sol = dd.SchwarzSolver(prob, dec)
+    x, iters, _ = sol.solve(iters=300, mode="additive")
+    assert float(jnp.linalg.norm(x - x_direct)) < 1e-8
+
+
+def test_overlap_schwarz_converges(local_prob):
+    prob, _ = local_prob
+    x_direct = cls.solve(prob)
+    dec = dd.decompose_1d(prob.n, dd.uniform_boundaries(3), overlap=2)
+    sol = dd.SchwarzSolver(prob, dec, mu=1.0)
+    x, _, hist = sol.solve(iters=300, mode="multiplicative")
+    assert float(jnp.linalg.norm(x - x_direct)) < 1e-7
+    assert hist[-1] < hist[0]
+
+
+def test_ddkf_vmapped_equals_direct(local_prob):
+    """error_DD-DA ~ 1e-11 (paper Table 11)."""
+    prob, obs = local_prob
+    x_direct = cls.solve(prob)
+    for p in (2, 4, 8):
+        res = dydd.dydd_1d(obs, p)
+        dec = dd.decompose_1d(prob.n, res.boundaries)
+        packed = ddkf.pack(prob, dec)
+        x = ddkf.solve_vmapped(packed, iters=120)
+        err = float(jnp.linalg.norm(x - x_direct))
+        assert err < 1e-9, (p, err)
+
+
+def test_ddkf_with_dydd_balances_and_solves(local_prob):
+    prob, obs = local_prob
+    x, res, dec = ddkf.ddkf_with_dydd(prob, obs, p=4, iters=150)
+    assert res.efficiency > 0.95
+    x_direct = cls.solve(prob)
+    assert float(jnp.linalg.norm(x - x_direct)) < 1e-8
+
+
+def test_ddkf_overlap_path(local_prob):
+    prob, obs = local_prob
+    x_direct = cls.solve(prob)
+    dec = dd.decompose_1d(prob.n, dd.uniform_boundaries(3), overlap=2)
+    packed = ddkf.pack(prob, dec, mu=1.0)
+    x = ddkf.solve_vmapped(packed, iters=200)
+    assert float(jnp.linalg.norm(x - x_direct)) < 1e-6

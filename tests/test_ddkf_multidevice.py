@@ -1,0 +1,40 @@
+"""shard_map DD-KF under real (forced) multi-device XLA — the production
+communication path, exercised in a subprocess so the main test session
+keeps its single-device view."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+SCRIPT = r"""
+import jax
+jax.config.update("jax_enable_x64", True)
+import numpy as np, jax.numpy as jnp
+from repro.core import cls, dd, ddkf, dydd
+
+rng = np.random.default_rng(0)
+obs = rng.beta(2, 5, size=400)
+prob = cls.local_problem(jax.random.PRNGKey(0), 128, obs)
+x_direct = cls.solve(prob)
+res = dydd.dydd_1d(obs, 8)
+dec = dd.decompose_1d(prob.n, res.boundaries, overlap=0)
+packed = ddkf.pack(prob, dec)
+mesh = jax.make_mesh((8,), ("sub",),
+                     axis_types=(jax.sharding.AxisType.Auto,))
+x_s = ddkf.solve_shardmap(packed, mesh, axis="sub", iters=120)
+err = float(jnp.linalg.norm(x_s - x_direct))
+assert err < 1e-9, err
+print("OK", err)
+"""
+
+
+@pytest.mark.slow
+def test_shardmap_ddkf_8_devices():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "OK" in out.stdout

@@ -1,0 +1,170 @@
+"""DyDD scheduling/migration — paper §5, incl. the worked example."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import dydd
+
+
+PAPER_EDGES = [(0, 1), (0, 2), (1, 2), (1, 3), (2, 3), (2, 4), (4, 5),
+               (5, 6), (5, 7), (6, 7)]
+PAPER_LOADS = np.array([5, 4, 6, 2, 5, 3, 5, 2])
+
+
+def test_paper_laplacian_matrix():
+    """eq. (30): the 8x8 Laplacian of the Figure-2 processor graph."""
+    L = dydd.laplacian(8, PAPER_EDGES)
+    expected = np.array([
+        [2, -1, -1, 0, 0, 0, 0, 0],
+        [-1, 3, -1, -1, 0, 0, 0, 0],
+        [-1, -1, 4, -1, -1, 0, 0, 0],
+        [0, -1, -1, 2, 0, 0, 0, 0],
+        [0, 0, -1, 0, 2, -1, 0, 0],
+        [0, 0, 0, 0, -1, 3, -1, -1],
+        [0, 0, 0, 0, 0, -1, 2, -1],
+        [0, 0, 0, 0, 0, -1, -1, 2],
+    ], dtype=np.float64)
+    np.testing.assert_array_equal(L, expected)
+
+
+def test_paper_worked_example_deltas():
+    """The published migrations: delta12=1, delta13=0, delta32=0,
+    delta34=1, delta35=1, delta56=2, delta67=0, delta68=1, delta78=1."""
+    sch = dydd.schedule(PAPER_LOADS, PAPER_EDGES)
+    d = dict(zip(sch.edges, sch.deltas))
+    assert d[(0, 1)] == 1          # delta_{1,2}
+    assert d[(0, 2)] == 0          # delta_{1,3}
+    assert d[(1, 2)] == 0          # -delta_{3,2}
+    assert d[(2, 3)] == 1          # delta_{3,4}
+    assert d[(2, 4)] == 1          # delta_{3,5}
+    assert d[(4, 5)] == 2          # delta_{5,6}
+    assert d[(5, 6)] == 0          # delta_{6,7}
+    assert d[(5, 7)] == 1          # delta_{6,8}
+    assert d[(6, 7)] == 1          # delta_{7,8}
+
+
+def test_paper_worked_example_balances_to_average():
+    """Figure 4: every subdomain ends at the average load 4."""
+    final, _ = dydd.balance(PAPER_LOADS, PAPER_EDGES)
+    np.testing.assert_array_equal(final, 4 * np.ones(8))
+
+
+def test_balance_ratio():
+    assert dydd.balance_ratio([4, 4, 4]) == 1.0
+    assert dydd.balance_ratio([2, 4]) == 0.5
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    p=st.integers(2, 12),
+    seed=st.integers(0, 2**31 - 1),
+    graph=st.sampled_from(["chain", "star", "ring"]),
+)
+def test_balance_properties(p, seed, graph):
+    """Invariants for arbitrary loads on the paper's graph families:
+    conservation, non-negativity, and E >= E_initial (never worse)."""
+    rng = np.random.default_rng(seed)
+    loads = rng.integers(0, 500, p)
+    edges = {"chain": dydd.chain_edges, "star": dydd.star_edges,
+             "ring": dydd.ring_edges}[graph](p)
+    final, schedules = dydd.balance(loads, edges)
+    assert final.sum() == loads.sum()
+    assert final.min() >= 0
+    assert dydd.balance_ratio(final) >= dydd.balance_ratio(loads) - 1e-12
+    # movement restricted to graph edges by construction of Schedule.apply
+    for sch in schedules:
+        assert set(sch.edges) <= set(tuple(e) for e in edges)
+
+
+@settings(max_examples=40, deadline=None)
+@given(p=st.integers(2, 10), seed=st.integers(0, 2**31 - 1))
+def test_balance_reaches_rounding_floor(p, seed):
+    """On a chain, the final max deviation is within the rounding floor
+    (paper Table 13 stopping criterion ~ deg/2)."""
+    rng = np.random.default_rng(seed)
+    loads = rng.integers(0, 300, p)
+    final, _ = dydd.balance(loads, dydd.chain_edges(p), max_rounds=128)
+    lbar = loads.sum() / p
+    floor = max(1.0, max(dydd.degrees(p, dydd.chain_edges(p))) / 2.0)
+    assert np.abs(final - lbar).max() <= floor + 1.0
+
+
+def test_schedule_conserves_and_zero_on_balanced():
+    loads = np.array([10, 10, 10, 10])
+    sch = dydd.schedule(loads, dydd.chain_edges(4))
+    assert sch.total_movement == 0
+
+
+# ---------------------------------------------------------------------------
+# Geometric 1D DyDD (DD step / migration / update).
+# ---------------------------------------------------------------------------
+
+def test_dydd_1d_balances_beta_distribution():
+    rng = np.random.default_rng(0)
+    obs = rng.beta(2, 5, 1500)
+    res = dydd.dydd_1d(obs, 8)
+    assert res.loads_final.sum() == 1500
+    assert res.efficiency > 0.95
+
+
+def test_dydd_1d_migration_exact_counts():
+    rng = np.random.default_rng(1)
+    obs = rng.uniform(0, 1, 999)
+    res = dydd.dydd_1d(obs, 7)
+    # update step recount equals the scheduled targets exactly
+    lbar = 999 / 7
+    assert np.abs(res.loads_final - lbar).max() <= 2.0
+
+
+def test_dydd_1d_empty_subdomain_repartition():
+    """Paper Example 1 Case 2 structure: one empty subdomain triggers the
+    DD step (split the max-load adjacent subdomain)."""
+    rng = np.random.default_rng(2)
+    obs = rng.uniform(0, 0.5, 1500)    # right half empty under p=2
+    res = dydd.dydd_1d(obs, 2)
+    assert res.repartitioned
+    assert res.loads_initial[1] == 0
+    assert res.loads_final.min() > 0
+    assert res.efficiency > 0.99
+
+
+def test_dydd_1d_three_empty_subdomains():
+    """Paper Example 2 Case 4 structure: 3 of 4 subdomains empty."""
+    rng = np.random.default_rng(3)
+    obs = rng.uniform(0.75, 1.0, 1500)  # all mass in the last quarter
+    res = dydd.dydd_1d(obs, 4)
+    assert (res.loads_initial[:3] == 0).all()
+    assert res.loads_final.min() > 0
+    assert res.efficiency > 0.95
+
+
+def test_star_graph_example3_structure():
+    """Example 3: star topology (deg(1) = p-1)."""
+    for p in (2, 4, 8, 16, 32):
+        edges = dydd.star_edges(p)
+        deg = dydd.degrees(p, edges)
+        assert deg[0] == p - 1
+        assert (deg[1:] == 1).all()
+        rng = np.random.default_rng(p)
+        loads = rng.integers(1, 200, p)
+        final, _ = dydd.balance(loads, edges)
+        assert final.sum() == loads.sum()
+        assert dydd.balance_ratio(final) >= dydd.balance_ratio(loads)
+
+
+def test_grid_torus_edges():
+    edges = dydd.grid_edges(4, 4, torus=True)
+    deg = dydd.degrees(16, edges)
+    assert (deg == 4).all()     # torus is 4-regular
+
+
+def test_schedule_jnp_matches_numpy():
+    import jax.numpy as jnp
+    loads = PAPER_LOADS.astype(np.float64)
+    L = dydd.laplacian(8, PAPER_EDGES)
+    pinv = np.linalg.pinv(L)
+    inc = dydd.incidence_matrix(8, PAPER_EDGES)
+    d_np = dydd.schedule(loads, PAPER_EDGES).deltas
+    d_j = dydd.schedule_jnp(jnp.asarray(loads), jnp.asarray(pinv),
+                            jnp.asarray(inc))
+    np.testing.assert_array_equal(np.asarray(d_j, dtype=np.int64), d_np)

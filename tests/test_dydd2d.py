@@ -1,0 +1,131 @@
+"""2D DyDD — the paper's Ω ⊂ R² setting (Figures 1-4) — plus the gram
+kernel (DD-KF normal-matrix hot spot)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import cls, dd, ddkf, dydd, dydd2d
+from repro.kernels import ops, ref
+
+
+# ---------------------------------------------------------------------------
+# 2D DyDD.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["uniform", "beta", "clustered"])
+def test_dydd_2d_balances(kind):
+    obs = dydd2d.make_observations_2d(1600, kind=kind, seed=3)
+    res = dydd2d.dydd_2d(obs, pr=4, pc=4)
+    assert res.loads_final.sum() == 1600
+    assert res.efficiency > 0.95, res.loads_final
+    # figures 1-4 structure: the initial clustered tiling is unbalanced
+    if kind == "clustered":
+        assert dydd.balance_ratio(res.loads_initial.reshape(-1)) < 0.5
+
+
+def test_dydd_2d_empty_cells():
+    """Figure 1's configuration: whole regions without observations."""
+    rng = np.random.default_rng(0)
+    obs = np.stack([rng.uniform(0, 0.45, 900),
+                    rng.uniform(0.55, 1.0, 900)], axis=1)  # top-left only
+    res = dydd2d.dydd_2d(obs, pr=2, pc=4)
+    assert (res.loads_initial == 0).any()
+    assert res.loads_final.min() > 0
+    assert res.efficiency > 0.95
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), pr=st.integers(2, 4),
+       pc=st.integers(2, 5))
+def test_dydd_2d_properties(seed, pr, pc):
+    obs = dydd2d.make_observations_2d(800, kind="clustered", seed=seed)
+    res = dydd2d.dydd_2d(obs, pr=pr, pc=pc)
+    assert res.loads_final.sum() == 800                  # conservation
+    lbar = 800 / (pr * pc)
+    assert np.abs(res.loads_final - lbar).max() <= max(2.0, 0.05 * lbar)
+    # y-edges monotone; x-edges monotone per strip
+    assert (np.diff(res.y_edges) >= 0).all()
+    assert (np.diff(res.x_edges, axis=1) >= 0).all()
+
+
+def test_dydd_2d_matches_grid_graph_schedule_floor():
+    """The geometric result is at least as balanced as the grid-graph
+    diffusion schedule's fixed point."""
+    obs = dydd2d.make_observations_2d(1024, kind="beta", seed=9)
+    res = dydd2d.dydd_2d(obs, pr=4, pc=4)
+    graph_final, _ = dydd.balance(res.loads_initial.reshape(-1),
+                                  dydd.grid_edges(4, 4, torus=False))
+    assert res.efficiency >= dydd.balance_ratio(graph_final) - 0.02
+
+
+def test_cell_col_sets_partition_mesh():
+    obs = dydd2d.make_observations_2d(500, seed=1)
+    res = dydd2d.dydd_2d(obs, pr=2, pc=3)
+    sets = dydd2d.cell_col_sets(12, 10, res.y_edges, res.x_edges)
+    allc = np.concatenate(sets)
+    np.testing.assert_array_equal(np.sort(allc), np.arange(120))
+
+
+def test_ddkf_on_2d_decomposition():
+    """End-to-end: 2D DyDD tiling -> DD-KF solve == direct CLS (the 2D
+    analogue of the paper's pipeline; Remark 4's I x J decomposition)."""
+    nx, ny = 12, 8
+    n = nx * ny
+    obs2 = dydd2d.make_observations_2d(400, kind="clustered", seed=4)
+    # project obs to 1D raster position for the spatially-local operator
+    obs_raster = (np.clip((obs2[:, 1] * ny).astype(int), 0, ny - 1) * nx
+                  + np.clip((obs2[:, 0] * nx).astype(int), 0, nx - 1)
+                  + 0.5) / n
+    prob = cls.local_problem(jax.random.PRNGKey(0), n, np.sort(obs_raster))
+    res = dydd2d.dydd_2d(obs2, pr=2, pc=2)
+    col_sets = dydd2d.cell_col_sets(nx, ny, res.y_edges, res.x_edges)
+    col_sets = [c for c in col_sets if c.size]
+    dec = dd.Decomposition(n=n, col_sets=tuple(col_sets),
+                           boundaries=np.linspace(0, 1, len(col_sets) + 1),
+                           overlap=0)
+    packed = ddkf.pack(prob, dec)
+    x = ddkf.solve_vmapped(packed, iters=250, damping=0.7)
+    err = float(jnp.linalg.norm(x - cls.solve(prob)))
+    assert err < 1e-6, err
+
+
+# ---------------------------------------------------------------------------
+# gram kernel.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("p,m,w", [(4, 300, 32), (2, 512, 64), (1, 64, 16)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gram_kernel_sweep(p, m, w, dtype):
+    rng = np.random.default_rng(0)
+    A = jnp.asarray(rng.normal(size=(p, m, w)), jnp.float32).astype(dtype)
+    r = jnp.asarray(rng.uniform(0.5, 2.0, (p, m)),
+                    jnp.float32).astype(dtype)
+    out = ops.gram(A, r, mode="interpret", block_m=128)
+    want = ref.gram_ref(A.astype(jnp.float32), r.astype(jnp.float32))
+    tol = 1e-3 if dtype == jnp.float32 else 3e-1
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want), atol=tol * float(
+                                   jnp.max(jnp.abs(want))) / 100 + tol,
+                               rtol=tol)
+
+
+def test_gram_matches_ddkf_pack_normal_matrix():
+    """The kernel computes exactly the normal matrices ddkf.pack builds."""
+    rng = np.random.default_rng(1)
+    obs = rng.beta(2, 5, 200)
+    prob = cls.local_problem(jax.random.PRNGKey(0), 64, obs)
+    dec = dd.decompose_1d(64, dd.uniform_boundaries(4))
+    packed = ddkf.pack(prob, dec)
+    N = ops.gram(packed.A_loc.astype(jnp.float32),
+                 jnp.tile(packed.r.astype(jnp.float32), (4, 1)),
+                 mode="interpret", block_m=128)
+    # pack stores cholesky(N + pad-identity); reconstruct and compare
+    for i in range(4):
+        L = np.asarray(packed.L_loc[i], np.float64)
+        got = L @ L.T
+        k = int(np.asarray(packed.mask[i]).sum())
+        want = np.asarray(N[i], np.float64)
+        want[np.arange(k, packed.w), np.arange(k, packed.w)] += 1.0
+        np.testing.assert_allclose(got, want, atol=1e-3)

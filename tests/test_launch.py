@@ -1,0 +1,140 @@
+"""Launch-layer units: HLO collective parser, roofline math, serve driver,
+train driver (tiny end-to-end), CG Laplacian scheduler."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import dydd
+from repro.launch import hlo_analysis
+
+
+# ---------------------------------------------------------------------------
+# HLO collective parsing.
+# ---------------------------------------------------------------------------
+
+HLO_SAMPLE = """
+  %all-gather.1 = f32[16,4096,6144]{1,0,2} all-gather(%x), channel_id=22, replica_groups=[16,16]<=[256], dimensions={0}
+  %all-reduce.9 = bf16[128,256]{1,0} all-reduce(%y), replica_groups=[16,16]<=[256], to_apply=%add
+  %ar.tuple = (f32[8,8]{1,0}, f32[8,8]{1,0}) all-reduce(%a, %b), replica_groups=[2,128]<=[256]
+  %collective-permute.2 = bf16[4,128]{1,0} collective-permute(%z), source_target_pairs={{0,1}}
+  %rs = f32[2,8]{1,0} reduce-scatter(%w), replica_groups=[4,64]<=[256], dimensions={0}
+  %not-a-collective = f32[4,4]{1,0} add(%p, %q)
+"""
+
+
+def test_shape_bytes():
+    assert hlo_analysis._shape_bytes("f32[16,4096,6144]{1,0,2}") == \
+        16 * 4096 * 6144 * 4
+    assert hlo_analysis._shape_bytes("bf16[128,256]{1,0}") == 128 * 256 * 2
+    assert hlo_analysis._shape_bytes("(f32[8,8]{1,0}, f32[8,8]{1,0})") == \
+        2 * 64 * 4
+
+
+def test_collective_bytes_parser():
+    stats = hlo_analysis.collective_bytes(HLO_SAMPLE)
+    assert stats.counts == {"all-gather": 1, "all-reduce": 2,
+                            "collective-permute": 1, "reduce-scatter": 1}
+    # all-gather: b*(g-1)/g with g=16
+    ag = 16 * 4096 * 6144 * 4 * 15 / 16
+    assert abs(stats.bytes_by_kind["all-gather"] - ag) < 1.0
+    # permute = plain result bytes
+    assert stats.bytes_by_kind["collective-permute"] == 4 * 128 * 2
+    # reduce-scatter = b*(g-1), g=64
+    assert stats.bytes_by_kind["reduce-scatter"] == 2 * 8 * 4 * 63
+    assert stats.per_device_bytes > 0
+
+
+def test_group_size_parsing():
+    assert hlo_analysis._group_size("replica_groups=[16,16]<=[256]") == 16
+    assert hlo_analysis._group_size("replica_groups={{0,1,2,3}}") == 4
+
+
+def test_roofline_terms_math():
+    r = hlo_analysis.Roofline(
+        flops=1e15, hbm_bytes=1e13, coll_bytes_per_device=1e9, chips=256,
+        compute_s=1e15 / (256 * hlo_analysis.PEAK_FLOPS),
+        memory_s=1e13 / (256 * hlo_analysis.HBM_BW),
+        collective_s=1e9 / hlo_analysis.LINK_BW,
+        model_flops=5e14, counts={})
+    assert r.dominant == "memory"     # 47.7ms > 20ms coll > 19.8ms compute
+    assert 0 < r.roofline_frac < 1
+    assert r.useful_flops_frac == pytest.approx(0.5)
+
+
+def test_model_flops_counts():
+    from repro import configs
+    cfg = configs.get_config("mixtral-8x22b")
+    total = cfg.param_count(active_only=False)
+    active = cfg.param_count(active_only=True)
+    assert total > 2.5 * active          # 8 experts, top-2
+    mf = hlo_analysis.model_flops_train(cfg, 4096, 256)
+    assert mf == pytest.approx(6.0 * active * 4096 * 256)
+
+
+# ---------------------------------------------------------------------------
+# Matrix-free CG Laplacian solve (large-p scheduling).
+# ---------------------------------------------------------------------------
+
+def test_cg_matches_lstsq_on_small_graph():
+    edges = dydd.grid_edges(4, 4, torus=True)
+    rng = np.random.default_rng(0)
+    loads = rng.integers(0, 100, 16).astype(np.float64)
+    b = loads - loads.mean()
+    L = dydd.laplacian(16, edges)
+    lam_dense, *_ = np.linalg.lstsq(L, b, rcond=None)
+    lam_cg = dydd._solve_laplacian_cg(
+        np.asarray(edges), dydd.degrees(16, edges).astype(np.float64), b)
+    # both are min-norm (mean-zero) solutions
+    np.testing.assert_allclose(lam_cg - lam_cg.mean(),
+                               lam_dense - lam_dense.mean(), atol=1e-6)
+
+
+def test_large_torus_schedule_fast_and_balanced():
+    import time
+    edges = dydd.grid_edges(32, 32, torus=True)
+    rng = np.random.default_rng(1)
+    loads = rng.integers(0, 1000, 1024)
+    t0 = time.perf_counter()
+    final, _ = dydd.balance(loads, edges, max_rounds=8)
+    assert time.perf_counter() - t0 < 5.0
+    assert dydd.balance_ratio(final) > 0.95
+    assert final.sum() == loads.sum()
+
+
+# ---------------------------------------------------------------------------
+# Serve driver.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_serve_batch_driver():
+    from repro import configs
+    from repro.launch.serve import Request, serve_batch
+    from repro.models import transformer
+
+    cfg = configs.get_smoke_config("yi_6b")
+    params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(1, cfg.vocab_size, 8 + i,
+                                        dtype=np.int64).astype(np.int32),
+                    max_new=4 + i) for i in range(3)]
+    reqs, stats = serve_batch(cfg, params, reqs, max_seq=32)
+    assert [len(r.out) for r in reqs] == [4, 5, 6]
+    assert stats["decode_s"] > 0
+
+
+@pytest.mark.slow
+def test_train_driver_resume(tmp_path):
+    from repro import configs
+    from repro.launch.train import train
+
+    cfg = configs.get_smoke_config("glm4_9b")
+    _, _, losses1 = train(cfg, steps=4, seq=32, global_batch=4, dp=2,
+                          ckpt_dir=str(tmp_path), ckpt_every=2,
+                          log_every=100)
+    # resume continues from step 4 -> no further steps requested
+    _, _, losses2 = train(cfg, steps=6, seq=32, global_batch=4, dp=2,
+                          ckpt_dir=str(tmp_path), ckpt_every=2,
+                          log_every=100)
+    assert len(losses2) == 2     # resumed at 4, ran 4..5

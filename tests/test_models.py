@@ -1,0 +1,166 @@
+"""Per-arch smoke tests (reduced configs, forward/train/decode on CPU) —
+deliverable (f): one smoke test per assigned architecture."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import transformer
+from repro.optim import adamw
+from repro.runtime import steps as steps_mod
+
+
+def _batch(cfg, B=2, S=16, seed=0):
+    rng = np.random.default_rng(seed)
+    batch = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)}
+    if cfg.frontend == "audio_stub":
+        batch["frames"] = 0.02 * jnp.asarray(
+            rng.normal(size=(B, cfg.encoder_seq, cfg.d_model)), jnp.float32)
+    if cfg.frontend == "vision_stub":
+        batch["patches"] = 0.02 * jnp.asarray(
+            rng.normal(size=(B, cfg.num_patches, cfg.d_model)), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", configs.ARCHS)
+def test_smoke_forward_and_train_step(arch):
+    """Instantiate the reduced same-family config, run one forward and one
+    train step on CPU, assert output shapes + no NaNs."""
+    cfg = configs.get_smoke_config(arch)
+    params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    h = transformer.forward(cfg, params, batch)
+    S_expect = batch["tokens"].shape[1] + (
+        cfg.num_patches if cfg.frontend == "vision_stub" else 0)
+    assert h.shape == (2, S_expect, cfg.d_model)
+    assert not bool(jnp.any(jnp.isnan(h)))
+
+    step = steps_mod.make_train_step(cfg, adamw.AdamWConfig(lr=1e-3),
+                                     donate=False)
+    opt = adamw.adamw_init(params)
+    loss, new_params, new_opt = step(params, opt, batch)
+    assert loss.shape == ()
+    assert not bool(jnp.isnan(loss))
+    assert int(new_opt["step"]) == 1
+    # params actually changed
+    d0 = jax.tree.leaves(params)[0]
+    d1 = jax.tree.leaves(new_params)[0]
+    assert not np.allclose(np.asarray(d0), np.asarray(d1))
+
+
+@pytest.mark.parametrize("arch", configs.ARCHS)
+def test_decode_matches_forward(arch):
+    """prefill + one serve_step == full forward on the extended sequence
+    (exact KV-cache/state handoff) for every arch family."""
+    cfg = configs.get_smoke_config(arch)
+    if cfg.num_experts:
+        # deterministic routing for the equality check (DyDD re-routing is
+        # a training-time balancing choice; see test_moe.py)
+        cfg = dataclasses.replace(cfg, moe_dydd_balance=False,
+                                  capacity_factor=4.0)
+    params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+    B, S = 2, 16
+    batch = _batch(cfg, B, S)
+    P = cfg.num_patches if cfg.frontend == "vision_stub" else 0
+    logits_last, cache = transformer.prefill(cfg, params, batch,
+                                             max_seq=P + S + 8)
+    nxt = jnp.argmax(logits_last, -1)[:, None].astype(jnp.int32)
+    logits2, _ = transformer.serve_step(cfg, params, cache, nxt,
+                                        jnp.asarray(P + S, jnp.int32))
+    ext = dict(batch, tokens=jnp.concatenate([batch["tokens"], nxt], 1))
+    h = transformer.forward(cfg, params, ext)
+    ref = transformer.logits_fn(cfg, params, h[:, -1:, :])[:, 0]
+    scale = float(jnp.max(jnp.abs(ref))) + 1e-9
+    err = float(jnp.max(jnp.abs(logits2[:, 0] - ref))) / scale
+    assert err < 1e-3, err
+
+
+@pytest.mark.parametrize("arch", configs.ARCHS)
+def test_param_specs_structure_matches_params(arch):
+    cfg = configs.get_smoke_config(arch)
+    params = transformer.param_shapes(cfg)
+    specs = transformer.param_specs(cfg)
+    t1 = jax.tree_util.tree_structure(params)
+    t2 = jax.tree_util.tree_structure(
+        specs, is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+    assert t1 == t2
+
+
+@pytest.mark.parametrize("arch", configs.ARCHS)
+def test_full_config_dims(arch):
+    """The full configs carry the exact assigned dimensions."""
+    cfg = configs.get_config(arch)
+    expected = {
+        "recurrentgemma_9b": (38, 4096, 16, 1, 12288, 256000),
+        "gemma_7b": (28, 3072, 16, 16, 24576, 256000),
+        "yi_6b": (32, 4096, 32, 4, 11008, 64000),
+        "gemma3_1b": (26, 1152, 4, 1, 6912, 262144),
+        "glm4_9b": (40, 4096, 32, 2, 13696, 151552),
+        "whisper_large_v3": (32, 1280, 20, 20, 5120, 51866),
+        "mixtral_8x22b": (56, 6144, 48, 8, 16384, 32768),
+        "olmoe_1b_7b": (16, 2048, 16, 16, 1024, 50304),
+        "phi3_vision_4_2b": (32, 3072, 32, 32, 8192, 32064),
+        "mamba2_1_3b": (48, 2048, 0, 0, 0, 50280),
+    }[arch]
+    got = (cfg.num_layers, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+           cfg.d_ff, cfg.vocab_size)
+    assert got == expected
+
+
+def test_moe_configs():
+    mix = configs.get_config("mixtral-8x22b")
+    assert (mix.num_experts, mix.experts_per_token) == (8, 2)
+    ol = configs.get_config("olmoe-1b-7b")
+    assert (ol.num_experts, ol.experts_per_token) == (64, 8)
+
+
+def test_mamba2_ssm_config():
+    cfg = configs.get_config("mamba2-1.3b")
+    assert cfg.ssm_state == 128 and cfg.attention_free and cfg.sub_quadratic
+
+
+def test_chunked_attention_exact():
+    """Blocked attention (q-chunks + k-band) is numerically identical to
+    the full computation, for global and local layers."""
+    from repro.models import attention
+    cfg = configs.get_smoke_config("gemma3_1b").scaled(attn_q_chunk=8)
+    key = jax.random.PRNGKey(0)
+    params = transformer.init_params(cfg, key)
+    lp = jax.tree.map(lambda x: x[0], params["blocks"])
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, cfg.d_model),
+                          jnp.float32)
+    positions = jnp.broadcast_to(jnp.arange(32), (2, 32))
+    for window in (0, cfg.window):
+        full = attention.attention(
+            cfg.scaled(attn_q_chunk=0), lp["attn"], x, positions,
+            window=window)
+        chunked = attention.attention(cfg, lp["attn"], x, positions,
+                                      window=window)
+        np.testing.assert_allclose(np.asarray(chunked), np.asarray(full),
+                                   atol=2e-5)
+
+
+def test_long_context_skip_list():
+    from repro.configs import shapes
+    for arch in configs.ARCHS:
+        cfg = configs.get_config(arch)
+        ok, reason = shapes.cell_supported(cfg, "long_500k")
+        if cfg.name in shapes.LONG_CONTEXT_OK:
+            assert ok
+        else:
+            assert not ok and reason
+
+
+def test_param_count_sane():
+    # within 25% of the advertised sizes (embeddings included)
+    approx = {
+        "gemma_7b": 8.5e9, "yi_6b": 6e9, "glm4_9b": 9e9,
+        "mamba2_1_3b": 1.3e9, "olmoe_1b_7b": 7e9, "gemma3_1b": 1.0e9,
+    }
+    for arch, want in approx.items():
+        n = configs.get_config(arch).param_count()
+        assert 0.6 * want < n < 1.6 * want, (arch, n, want)

@@ -1,0 +1,137 @@
+"""Runtime: straggler monitor, sharding rules, end-to-end training smoke."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import transformer
+from repro.optim import AdamWConfig, adamw_init
+from repro.runtime import sharding, steps as steps_mod
+from repro.runtime.straggler import StragglerConfig, StragglerMonitor
+
+
+# ---------------------------------------------------------------------------
+# Straggler monitor (injected timings).
+# ---------------------------------------------------------------------------
+
+def test_straggler_flags_persistent_slowdown():
+    events = []
+    mon = StragglerMonitor(
+        StragglerConfig(grace_steps=2, deadline_factor=3.0,
+                        consecutive_trigger=2),
+        on_straggler=lambda s, t: events.append((s, t)))
+    for _ in range(10):
+        mon.record(0.1)
+    assert not events
+    mon.record(1.0)           # one blip: not yet
+    assert not events
+    mon.record(1.0)           # second consecutive: trigger
+    assert len(events) == 1
+
+
+def test_straggler_ignores_transients():
+    mon = StragglerMonitor(StragglerConfig(grace_steps=1,
+                                           consecutive_trigger=2))
+    flags = [mon.record(t) for t in
+             [0.1, 0.1, 0.1, 5.0, 0.1, 0.1, 5.0, 0.1]]
+    assert not any(flags)
+
+
+def test_straggler_grace_period_absorbs_compile():
+    mon = StragglerMonitor(StragglerConfig(grace_steps=3))
+    assert not mon.record(60.0)   # compile step
+    assert not mon.record(55.0)
+    assert not mon.record(0.1)
+
+
+# ---------------------------------------------------------------------------
+# Sharding rules.
+# ---------------------------------------------------------------------------
+
+def test_divisibility_fallback():
+    spec = sharding.param_spec((6, 48, 1, 12), None, "embed", "kv_heads",
+                               None)
+    # kv dim of size 1 can't shard over model=16 -> replicated
+    assert spec[2] is None
+
+
+def test_profile_switch():
+    with sharding.profile("dp"):
+        s = sharding.act_spec_shaped((256, 128), "batch", "seq")
+        # batch spans every axis in dp profile (256 % (2*16*16)=512 no;
+        # largest prefix: pod*data = 32 divides 256... depends on default
+        # sizes) — at minimum it is sharded
+        assert s[0] is not None
+    s2 = sharding.act_spec_shaped((256, 128), "batch", "seq")
+    assert s2[0] is not None
+
+
+def test_act_rules_kv_seq_always_model():
+    with sharding.profile("dp"):
+        s = sharding.act_spec_shaped((32, 128, 32768, 20, 64), None,
+                                     "batch", "kv_seq", None, None)
+    assert s[2] == "model"
+
+
+# ---------------------------------------------------------------------------
+# End-to-end training smoke: tiny model actually learns.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_tiny_model_loss_decreases():
+    cfg = configs.get_smoke_config("yi_6b")
+    params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+    step = steps_mod.make_train_step(cfg, AdamWConfig(lr=3e-3,
+                                                      weight_decay=0.0),
+                                     donate=False)
+    opt = adamw_init(params)
+    rng = np.random.default_rng(0)
+    # a memorizable repeating pattern
+    base = rng.integers(1, cfg.vocab_size, 33)
+    tokens = jnp.asarray(np.stack([base[:32], base[1:33]]), jnp.int32)
+    batch = {"tokens": tokens}
+    losses = []
+    for _ in range(40):
+        loss, params, opt = step(params, opt, batch)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.7, losses[::8]
+
+
+def test_gradient_accumulation_matches_full_batch():
+    cfg = configs.get_smoke_config("glm4_9b")
+    params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(1)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (4, 16)),
+                         jnp.int32)
+    batch = {"tokens": tokens}
+    opt = adamw_init(params)
+    s1 = steps_mod.make_train_step(cfg, AdamWConfig(lr=1e-3,
+                                                    accum_steps=1),
+                                   donate=False)
+    s2 = steps_mod.make_train_step(cfg, AdamWConfig(lr=1e-3,
+                                                    accum_steps=2),
+                                   donate=False)
+    l1, p1, _ = s1(params, opt, batch)
+    l2, p2, _ = s2(params, opt, batch)
+    assert float(l1) == pytest.approx(float(l2), rel=1e-5)
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)
+
+
+def test_serve_step_greedy_generation():
+    cfg = configs.get_smoke_config("gemma3_1b")
+    params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+    B, S = 2, 8
+    rng = np.random.default_rng(2)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+    _, cache = transformer.prefill(cfg, params, {"tokens": toks},
+                                   max_seq=S + 8)
+    serve = steps_mod.make_serve_step(cfg, donate=False)
+    cur = toks[:, -1:]
+    for i in range(4):
+        logits, cache = serve(params, cache, cur,
+                              jnp.asarray(S + i, jnp.int32))
+        cur = jnp.argmax(logits, -1).astype(jnp.int32)
+        assert cur.shape == (B, 1)
+        assert not bool(jnp.any(jnp.isnan(logits)))

@@ -1,0 +1,104 @@
+"""Streaming assimilation benchmark: static DD vs online DyDD.
+
+For every registered observation-stream scenario, run the multi-cycle
+engine twice — ``rebalance=False`` (the paper's static decomposition,
+left to degrade as the network moves) and ``rebalance=True`` (online
+DyDD with the default threshold/hysteresis policy) — and emit a JSON
+comparison of per-cycle latency and the imbalance trajectory.
+
+  PYTHONPATH=src python benchmarks/streaming_bench.py --out streaming.json
+  PYTHONPATH=src python benchmarks/streaming_bench.py \
+      --n 96 --m 200 --cycles 4 --scenarios drifting_swarm    # smoke
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import numpy as np  # noqa: E402
+
+from repro.assim import AssimilationEngine, EngineConfig, streams  # noqa: E402
+
+
+def run_arm(name: str, rebalance: bool, args) -> dict:
+    cfg = EngineConfig(n=args.n, p=args.p, iters=args.iters,
+                       rebalance=rebalance,
+                       imbalance_threshold=args.threshold,
+                       track_reference=args.track_reference)
+    eng = AssimilationEngine(cfg)
+    journal = eng.run_scenario(name, m=args.m, cycles=args.cycles,
+                               seed=args.seed)
+    cycle_times = journal.cycle_times
+    return {
+        "rebalance": rebalance,
+        "imbalance_trajectory": journal.imbalance_trajectory,
+        "efficiency_trajectory": [r.efficiency for r in journal.records],
+        "cycle_latency_s": cycle_times,
+        "cycle_latency_mean_s": float(np.mean(cycle_times)),
+        # Steady-state latency: drop the first cycles, which pay the jit
+        # specialization for each new padded block width.
+        "cycle_latency_steady_s": float(np.mean(
+            cycle_times[len(cycle_times) // 2:])),
+        "solve_time_mean_s": float(np.mean(
+            [r.solve_time for r in journal.records])),
+        "pack_time_mean_s": float(np.mean(
+            [r.pack_time for r in journal.records])),
+        "repartitions": journal.repartition_count,
+        "migrated_total": journal.migrated_total,
+        "summary": journal.summary(),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--n", type=int, default=256)
+    ap.add_argument("--m", type=int, default=600)
+    ap.add_argument("--p", type=int, default=8)
+    ap.add_argument("--cycles", type=int, default=8)
+    ap.add_argument("--iters", type=int, default=100)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--threshold", type=float, default=1.5)
+    ap.add_argument("--track-reference", action="store_true",
+                    help="also journal per-cycle error vs one-shot solve")
+    ap.add_argument("--scenarios", nargs="*", default=None,
+                    choices=streams.available(),
+                    help="subset of the registered scenarios (default: all)")
+    ap.add_argument("--out", default=None, help="write JSON here "
+                    "(default: stdout)")
+    args = ap.parse_args()
+
+    names = args.scenarios or streams.available()
+    report = {
+        "config": {"n": args.n, "m": args.m, "p": args.p,
+                   "cycles": args.cycles, "iters": args.iters,
+                   "seed": args.seed, "threshold": args.threshold},
+        "scenarios": {},
+    }
+    for name in names:
+        print(f"[streaming_bench] {name} ...", file=sys.stderr)
+        static = run_arm(name, rebalance=False, args=args)
+        dydd = run_arm(name, rebalance=True, args=args)
+        report["scenarios"][name] = {
+            "static": static,
+            "dydd": dydd,
+            "imbalance_reduction": float(
+                np.mean(static["imbalance_trajectory"])
+                / max(np.mean(dydd["imbalance_trajectory"]), 1e-12)),
+        }
+
+    text = json.dumps(report, indent=2)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text)
+        print(f"[streaming_bench] wrote {args.out}", file=sys.stderr)
+    else:
+        print(text)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,65 +1,71 @@
-"""The paper's §6 scenarios, end to end, with a moving observation network.
+"""Streaming DD-KF assimilation with online DyDD — thin engine driver.
 
-Reproduces the structure of Examples 1-4 and then goes beyond the paper's
-static snapshot: the observation distribution DRIFTS over assimilation
-cycles (a moving sensor swarm) and DyDD re-balances each cycle — the
-configuration the paper's conclusion names as future work ("each subdomain
-to move independently with time").
+Runs registered observation-stream scenarios through the
+:class:`repro.assim.AssimilationEngine`: multi-cycle DD-KF with the
+analysis carried forward as the next background and DyDD repartitioning
+the subdomains whenever the moving observation network unbalances them —
+the configuration the paper's conclusion names as future work ("each
+subdomain to move independently with time").
 
   PYTHONPATH=src python examples/dydd_assimilation.py
+  PYTHONPATH=src python examples/dydd_assimilation.py \
+      --n 96 --m 200 --cycles 4 --scenarios drifting_swarm   # CI smoke
 """
+import argparse
+
 import jax
 
 jax.config.update("jax_enable_x64", True)
 
-import jax.numpy as jnp  # noqa: E402
-import numpy as np  # noqa: E402
-
-from repro.core import cls, dd, ddkf, dydd  # noqa: E402
+from repro.assim import AssimilationEngine, EngineConfig, streams  # noqa: E402
 
 
-def drifting_observations(m, cycle, n_cycles, seed=0):
-    """A cluster of sensors drifting from x=0.2 to x=0.8 over cycles."""
-    rng = np.random.default_rng(seed + cycle)
-    center = 0.2 + 0.6 * cycle / max(n_cycles - 1, 1)
-    obs = np.clip(center + 0.08 * rng.normal(size=m), 0, 0.999999)
-    return np.sort(obs)
+def run_scenario(name: str, args) -> None:
+    cfg = EngineConfig(n=args.n, p=args.p, iters=args.iters,
+                       rebalance=not args.static,
+                       imbalance_threshold=args.threshold,
+                       hysteresis=args.hysteresis,
+                       track_reference=True)
+    eng = AssimilationEngine(cfg)
+    print(f"\n=== {name} ({'static DD' if args.static else 'DyDD'}, "
+          f"p={cfg.p}, m={args.m}, {args.cycles} cycles) ===")
+    print(f"{'cycle':>5s} {'imb_in':>7s} {'imb_out':>7s} {'E':>6s} "
+          f"{'rep':>4s} {'moved':>6s} {'t_cycle':>8s} {'err_DD-DA':>10s}")
+    journal = eng.run_scenario(name, m=args.m, cycles=args.cycles,
+                               seed=args.seed)
+    for r in journal.records:
+        print(f"{r.cycle:5d} {r.imbalance_before:7.2f} {r.imbalance:7.2f} "
+              f"{r.efficiency:6.3f} {'yes' if r.repartitioned else '-':>4s} "
+              f"{r.migrated:6d} {r.cycle_time * 1e3:7.1f}ms "
+              f"{r.error_vs_direct:10.2e}")
+    s = journal.summary()
+    print(f"summary: {s['repartitions']} repartitions, "
+          f"{s['migrated_total']} observations migrated, "
+          f"max imbalance {s['imbalance_max']:.3f}, "
+          f"max error vs one-shot solve {s['error_max']:.2e}")
 
 
-def main():
-    n, m, p, cycles = 512, 800, 8, 6
-    key = jax.random.PRNGKey(0)
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--n", type=int, default=512, help="state dimension")
+    ap.add_argument("--m", type=int, default=800, help="observations/cycle")
+    ap.add_argument("--p", type=int, default=8, help="subdomains")
+    ap.add_argument("--cycles", type=int, default=6)
+    ap.add_argument("--iters", type=int, default=120)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--threshold", type=float, default=1.5,
+                    help="max/mean imbalance ratio arming the rebalance")
+    ap.add_argument("--hysteresis", type=int, default=1,
+                    help="consecutive over-threshold cycles before firing")
+    ap.add_argument("--static", action="store_true",
+                    help="disable DyDD (static-DD baseline)")
+    ap.add_argument("--scenarios", nargs="*", default=None,
+                    choices=streams.available(),
+                    help="subset of the registered scenarios (default: all)")
+    args = ap.parse_args()
 
-    print(f"{cycles} assimilation cycles, {m} drifting observations, "
-          f"p={p} subdomains\n")
-    print(f"{'cycle':>5s} {'E static':>9s} {'E DyDD':>8s} {'rounds':>6s} "
-          f"{'moved':>6s} {'error_DD-DA':>12s}")
-
-    boundaries = np.linspace(0, 1, p + 1)
-    for c in range(cycles):
-        obs = drifting_observations(m, c, cycles)
-        prob = cls.local_problem(key, n, obs)
-
-        static_counts = np.histogram(obs, bins=p, range=(0, 1))[0]
-        e_static = dydd.balance_ratio(static_counts)
-
-        # Dynamic re-decomposition: start from LAST cycle's boundaries
-        # (the paper's 'dynamic redefining of the DD').
-        res = dydd.dydd_1d(obs, p, boundaries=boundaries.copy())
-        boundaries = res.boundaries
-
-        dec = dd.decompose_1d(n, res.boundaries)
-        packed = ddkf.pack(prob, dec)
-        x_dd = ddkf.solve_vmapped(packed, iters=120)
-        err = float(jnp.linalg.norm(x_dd - cls.solve(prob)))
-
-        print(f"{c:5d} {e_static:9.3f} {res.efficiency:8.3f} "
-              f"{res.rounds:6d} {res.total_movement:6d} {err:12.2e}")
-        assert res.efficiency > 0.8
-        assert err < 1e-8
-
-    print("\nDyDD keeps every cycle balanced while the static DD would "
-          "have collapsed to E~0 (all sensors in one subdomain).")
+    for name in args.scenarios or streams.available():
+        run_scenario(name, args)
 
 
 if __name__ == "__main__":

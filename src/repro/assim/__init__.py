@@ -1,0 +1,9 @@
+"""Streaming multi-cycle DD-KF assimilation with online DyDD rebalancing.
+
+See README.md in this directory for the engine loop, the rebalance
+trigger policy, and how to add a stream scenario.
+"""
+from repro.assim.engine import AssimilationEngine, EngineConfig  # noqa: F401
+from repro.assim.metrics import (  # noqa: F401
+    CycleMetrics, Journal, imbalance_ratio)
+from repro.assim import streams  # noqa: F401

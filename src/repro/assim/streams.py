@@ -1,0 +1,169 @@
+"""Observation-stream scenarios for the streaming assimilation engine.
+
+A *stream* is a named, seeded generator of per-cycle observation locations
+in [0, 1) — the moving observation network the paper's conclusion names as
+future work.  Every scenario is registered under a name so engines, tests
+and benchmarks can sweep the whole registry:
+
+    for name in streams.available():
+        for obs in streams.make_stream(name, m=400, cycles=6, seed=0):
+            ...  # obs is a sorted (m,) float array in [0, 1)
+
+Adding a scenario is one decorated function::
+
+    @register("my_scenario")
+    def my_scenario(m, cycles, seed):
+        rng = np.random.default_rng(seed)
+        for c in range(cycles):
+            yield np.sort(rng.uniform(0, 1, m))
+
+Contract: a scenario must be deterministic under a fixed ``seed``, yield
+exactly ``cycles`` arrays of shape ``(m,)``, sorted, with every location
+in [0, 1).  ``tests/test_assim.py`` enforces this for every registered
+name, so a new scenario gets its determinism/shape coverage for free.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Iterator
+
+import numpy as np
+
+from repro.data import observations as obs_mod
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamSpec:
+    """A registered scenario: ``fn(m, cycles, seed)`` yielding locations."""
+
+    name: str
+    fn: Callable[..., Iterator[np.ndarray]]
+    doc: str
+
+
+_REGISTRY: dict = {}
+
+
+def register(name: str):
+    """Register a scenario generator under ``name``."""
+    def deco(fn):
+        if name in _REGISTRY:
+            raise ValueError(f"stream scenario {name!r} already registered")
+        _REGISTRY[name] = StreamSpec(name=name, fn=fn,
+                                     doc=(fn.__doc__ or "").strip())
+        return fn
+    return deco
+
+
+def available() -> tuple:
+    """Sorted names of all registered scenarios."""
+    return tuple(sorted(_REGISTRY))
+
+
+def get(name: str) -> StreamSpec:
+    if name not in _REGISTRY:
+        raise ValueError(f"unknown stream scenario {name!r}; "
+                         f"available: {available()}")
+    return _REGISTRY[name]
+
+
+def make_stream(name: str, m: int, cycles: int, seed: int = 0,
+                **kw) -> Iterator[np.ndarray]:
+    """Instantiate scenario ``name`` as an iterator of per-cycle locations."""
+    spec = get(name)
+
+    def checked():
+        count = 0
+        for obs in spec.fn(m, cycles, seed, **kw):
+            obs = np.asarray(obs, dtype=np.float64)
+            assert obs.shape == (m,), (name, obs.shape)
+            yield obs
+            count += 1
+        assert count == cycles, (name, count, cycles)
+
+    return checked()
+
+
+def _finalize(obs: np.ndarray) -> np.ndarray:
+    return np.sort(np.clip(obs, 0.0, np.nextafter(1.0, 0.0)))
+
+
+# ---------------------------------------------------------------------------
+# Scenarios.
+# ---------------------------------------------------------------------------
+
+@register("drifting_swarm")
+def drifting_swarm(m, cycles, seed, width=0.08, start=0.15, stop=0.85):
+    """A tight sensor swarm drifting across the domain over the run —
+    the configuration that collapses a static DD to E ~ 0."""
+    rng = np.random.default_rng(seed)
+    for c in range(cycles):
+        center = start + (stop - start) * c / max(cycles - 1, 1)
+        yield _finalize(center + width * rng.normal(size=m))
+
+
+@register("bursty_clusters")
+def bursty_clusters(m, cycles, seed, max_clusters=3):
+    """A few clusters whose positions re-draw every cycle and whose mass is
+    bursty: one dominant cluster absorbs most sensors each cycle."""
+    rng = np.random.default_rng(seed)
+    for _ in range(cycles):
+        k = int(rng.integers(1, max_clusters + 1))
+        centers = rng.uniform(0.05, 0.95, k)
+        weights = rng.dirichlet(0.35 * np.ones(k))
+        which = rng.choice(k, size=m, p=weights)
+        yield _finalize(centers[which] + 0.04 * rng.normal(size=m))
+
+
+@register("sensor_dropout")
+def sensor_dropout(m, cycles, seed, p=8):
+    """Uniform coverage that loses a growing contiguous block of sensors
+    mid-run — whole subdomains go empty, exercising the DyDD DD-step
+    (split-the-loaded-neighbour repartition) — then recovers."""
+    rng = np.random.default_rng(seed)
+    for c in range(cycles):
+        obs = rng.uniform(0, 1, m)
+        # Outage window: middle third of the run, blacking out an expanding
+        # range of the p-way uniform intervals.
+        lo, hi = cycles // 3, max(2 * cycles // 3, cycles // 3 + 1)
+        if lo <= c < hi:
+            n_dead = min(1 + (c - lo), p - 1)
+            dead = tuple(range(n_dead))
+            obs = obs_mod.squeeze_out_of_subdomains(obs, dead, p, rng)
+        yield _finalize(obs)
+
+
+@register("diurnal")
+def diurnal(m, cycles, seed, period=8, width=0.10):
+    """A diurnal oscillation: the observation mass swings back and forth
+    across the domain sinusoidally, breathing wider at the turning points."""
+    rng = np.random.default_rng(seed)
+    for c in range(cycles):
+        phase = 2.0 * np.pi * c / period
+        center = 0.5 + 0.35 * np.sin(phase)
+        w = width * (1.0 + 0.5 * np.abs(np.cos(phase)))
+        yield _finalize(center + w * rng.normal(size=m))
+
+
+@register("storm_front")
+def storm_front(m, cycles, seed, background_frac=0.3):
+    """Composite 'storm front': a sparse uniform background network plus a
+    sharp front sweeping the domain, intensifying mid-run (drawing sensors
+    away from the background) and knocking out coverage behind it."""
+    rng = np.random.default_rng(seed)
+    for c in range(cycles):
+        t = c / max(cycles - 1, 1)
+        front = 0.1 + 0.8 * t
+        # Intensity peaks mid-run: the front recruits up to ~90% of sensors.
+        intensity = np.sin(np.pi * t)
+        m_front = int(m * (1.0 - background_frac) * intensity)
+        m_bg = m - m_front
+        storm = front + 0.03 * rng.normal(size=m_front)
+        # Behind the front the network is knocked out: background sensors
+        # only survive ahead of it (and a thin recovering strip at the far
+        # left edge).
+        bg = np.concatenate([
+            rng.uniform(min(front + 0.05, 0.95), 1.0, (2 * m_bg) // 3),
+            rng.uniform(0.0, 0.05, m_bg - (2 * m_bg) // 3),
+        ])
+        yield _finalize(np.concatenate([storm, bg]))

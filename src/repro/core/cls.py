@@ -112,30 +112,27 @@ def solve_cg(prob: CLSProblem, x0: jax.Array | None = None,
     return x
 
 
-def local_problem(key: jax.Array, n: int, obs_locations,
-                  stencil: int = 3, dtype=jnp.float64,
-                  smooth: float = 0.25) -> CLSProblem:
-    """A spatially-local CLS instance mirroring the paper's PDE setting.
-
-    * State system H0: identity rows plus ``smooth``-weighted second-
-      difference rows (a discretized diffusion/background term) — banded,
-      m0 = 2n - 2 > n, rank n.
-    * Observation system H1: each observation at location ``obs_locations[k]
-      in [0,1)`` maps to a ``stencil``-point interpolation row around the
-      nearest mesh point — the row is *local to the subdomain containing the
-      observation*, which is what makes DyDD's row balancing meaningful.
-    """
+def state_operator(n: int, smooth: float = 0.25):
+    """H0 of the paper's PDE setting: identity rows plus ``smooth``-weighted
+    second-difference rows (a discretized diffusion/background term) —
+    banded, m0 = 2n - 2 > n, rank n.  Returns a numpy (2n-2, n) array."""
     import numpy as np
-    obs = np.asarray(obs_locations, dtype=np.float64)
-    m1 = obs.shape[0]
-    k1, k2 = jax.random.split(key)
-
     eye = np.eye(n)
     d2 = np.zeros((n - 2, n))
     for i in range(n - 2):
         d2[i, i:i + 3] = (-1.0, 2.0, -1.0)
-    H0 = np.concatenate([eye, smooth * d2], axis=0)
+    return np.concatenate([eye, smooth * d2], axis=0)
 
+
+def observation_operator(n: int, obs_locations, stencil: int = 3):
+    """H1 of the paper's PDE setting: each observation at location
+    ``obs_locations[k] in [0,1)`` maps to a ``stencil``-point interpolation
+    row around the nearest mesh point — the row is *local to the subdomain
+    containing the observation*, which is what makes DyDD's row balancing
+    meaningful.  Returns a numpy (m1, n) array."""
+    import numpy as np
+    obs = np.asarray(obs_locations, dtype=np.float64)
+    m1 = obs.shape[0]
     H1 = np.zeros((m1, n))
     centers = np.clip((obs * n).astype(np.int64), 0, n - 1)
     half = stencil // 2
@@ -144,6 +141,21 @@ def local_problem(key: jax.Array, n: int, obs_locations,
         hi = min(n, centers[kk] + half + 1)
         wts = np.exp(-0.5 * (np.arange(lo, hi) - obs[kk] * n) ** 2)
         H1[kk, lo:hi] = wts / wts.sum()
+    return H1
+
+
+def local_problem(key: jax.Array, n: int, obs_locations,
+                  stencil: int = 3, dtype=jnp.float64,
+                  smooth: float = 0.25) -> CLSProblem:
+    """A spatially-local CLS instance mirroring the paper's PDE setting
+    (see :func:`state_operator` and :func:`observation_operator`)."""
+    import numpy as np
+    obs = np.asarray(obs_locations, dtype=np.float64)
+    m1 = obs.shape[0]
+    k1, k2 = jax.random.split(key)
+
+    H0 = state_operator(n, smooth=smooth)
+    H1 = observation_operator(n, obs, stencil=stencil)
 
     x_true = jax.random.normal(k1, (n,), dtype)
     noise = 1e-3 * jax.random.normal(k2, (H0.shape[0] + m1,), dtype)

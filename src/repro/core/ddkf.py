@@ -64,6 +64,22 @@ def pack(prob: cls_mod.CLSProblem, dec: dd_mod.Decomposition,
     A = jnp.concatenate([prob.H0, prob.H1], axis=0)
     r = jnp.concatenate([prob.R0, prob.R1])
     b = jnp.concatenate([prob.y0, prob.y1])
+    return with_rhs(pack_operator(A, r, dec, mu=mu), b)
+
+
+def pack_operator(A: jax.Array, r: jax.Array, dec: dd_mod.Decomposition,
+                  mu: float = 1.0) -> PackedDD:
+    """Pack the *operator* part of a decomposed CLS problem.
+
+    This is the expensive host-side work — slicing the p column blocks and
+    factoring the p local normal matrices — and it depends only on (A, r,
+    dec), not on the data vector b.  The streaming engine runs it for cycle
+    t+1 while the device is solving cycle t, then injects the cycle's rhs
+    with :func:`with_rhs` (a cheap ``dataclasses.replace``).
+
+    The returned ``PackedDD`` carries a zero rhs; pass it through
+    :func:`with_rhs` before solving.
+    """
     m, n = A.shape
     p = dec.p
     w = max(int(np.asarray(c).shape[0]) for c in dec.col_sets)
@@ -100,7 +116,12 @@ def pack(prob: cls_mod.CLSProblem, dec: dd_mod.Decomposition,
                     cols=jnp.asarray(cols), mask=jnp.asarray(mask),
                     muov=jnp.asarray(muov), wdiv=jnp.asarray(wdiv),
                     mult=jnp.asarray(np.maximum(counts, 1)).astype(A.dtype),
-                    r=r, b=b, n=n, p=p, w=w)
+                    r=r, b=jnp.zeros((m,), dtype=A.dtype), n=n, p=p, w=w)
+
+
+def with_rhs(packed: PackedDD, b: jax.Array) -> PackedDD:
+    """Inject the data vector b = [y0; y1] into an operator-only packing."""
+    return dataclasses.replace(packed, b=jnp.asarray(b, packed.A_loc.dtype))
 
 
 def _chol_solve(L, rhs):

@@ -3,10 +3,42 @@
 The paper's scenarios need observations that are "non uniformly distributed
 and general sparse"; we provide the distributions used by the benchmark
 tables, including configurations where entire subdomains start empty.
+
+Multi-cycle *streams* of observations (drifting swarms, bursty clusters,
+sensor dropout, ...) live in :mod:`repro.assim.streams`, which builds on
+the single-snapshot generators here.
 """
 from __future__ import annotations
 
 import numpy as np
+
+KINDS = ("uniform", "beta", "clustered")
+
+
+def squeeze_out_of_subdomains(obs: np.ndarray, empty_subdomains,
+                              p: int, rng: np.random.Generator) -> np.ndarray:
+    """Remap observations so the listed p-way uniform intervals are empty.
+
+    Each observation keeps its within-interval offset and is assigned
+    (seeded-uniformly) to one of the allowed intervals — reproduces the
+    paper's Example 1 Case 2 / Example 2 Cases 2-4 setups, and the
+    streaming sensor-dropout scenario.
+    """
+    empty = set(int(i) for i in empty_subdomains)
+    bad = [i for i in empty if not 0 <= i < p]
+    if bad:
+        raise ValueError(
+            f"empty_subdomains {sorted(bad)} out of range for p={p}")
+    allowed = [i for i in range(p) if i not in empty]
+    if not allowed:
+        raise ValueError(
+            f"cannot empty every subdomain: p={p}, "
+            f"empty_subdomains={sorted(empty)} leaves no interval for the "
+            f"observations (did you forget to pass p?)")
+    w = 1.0 / p
+    frac = np.asarray(obs, dtype=np.float64) % 1.0
+    idx = rng.integers(0, len(allowed), len(frac))
+    return (np.asarray(allowed, dtype=np.float64)[idx] + frac) * w
 
 
 def make_observations(m: int, kind: str = "beta", seed: int = 0,
@@ -16,7 +48,8 @@ def make_observations(m: int, kind: str = "beta", seed: int = 0,
     kind: "uniform" | "beta" (skewed) | "clustered" (Gaussian bumps).
     empty_subdomains: indices (of a p-way uniform split) that must contain
     no observations — reproduces the paper's Example 1 Case 2 / Example 2
-    Cases 2-4 setups.
+    Cases 2-4 setups.  Requires ``p > len(empty_subdomains)``; the default
+    p=1 admits no empty subdomains.
     """
     rng = np.random.default_rng(seed)
     if kind == "uniform":
@@ -28,16 +61,9 @@ def make_observations(m: int, kind: str = "beta", seed: int = 0,
         c = rng.integers(0, len(centers), m)
         obs = np.clip(centers[c] + 0.05 * rng.normal(size=m), 0, 0.999999)
     else:
-        raise ValueError(kind)
+        raise ValueError(
+            f"unknown observation kind {kind!r}; expected one of {KINDS}")
 
     if empty_subdomains:
-        # squeeze all mass out of the forbidden uniform intervals
-        allowed = [i for i in range(p) if i not in empty_subdomains]
-        assert allowed, "cannot empty every subdomain"
-        w = 1.0 / p
-        # map each obs into one of the allowed intervals, preserving its
-        # within-interval offset
-        frac = obs % 1.0
-        idx = rng.integers(0, len(allowed), m)
-        obs = np.array([(allowed[i] + f) * w for i, f in zip(idx, frac)])
+        obs = squeeze_out_of_subdomains(obs, empty_subdomains, p, rng)
     return np.sort(obs)

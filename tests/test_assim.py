@@ -1,0 +1,204 @@
+"""Streaming assimilation engine: scenario registry, rebalance policy,
+double-buffered pipelining, and agreement with the one-shot DD-KF solve."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.assim import (AssimilationEngine, EngineConfig, Journal,
+                         imbalance_ratio, streams)
+
+THRESHOLD = 1.5
+CYCLES = 6
+
+
+def small_config(**kw):
+    base = dict(n=64, p=4, iters=80, imbalance_threshold=THRESHOLD,
+                track_reference=True)
+    base.update(kw)
+    return EngineConfig(**base)
+
+
+# ---------------------------------------------------------------------------
+# Stream registry.
+# ---------------------------------------------------------------------------
+
+def test_registry_has_the_five_scenarios():
+    names = streams.available()
+    assert len(names) >= 5
+    for required in ("drifting_swarm", "bursty_clusters", "sensor_dropout",
+                     "diurnal", "storm_front"):
+        assert required in names
+
+
+def test_unknown_scenario_raises():
+    with pytest.raises(ValueError, match="unknown stream scenario"):
+        streams.make_stream("nope", 10, 2)
+
+
+def test_duplicate_registration_raises():
+    with pytest.raises(ValueError, match="already registered"):
+        streams.register("diurnal")(lambda m, cycles, seed: iter(()))
+
+
+@pytest.mark.parametrize("name", streams.available())
+def test_stream_determinism_and_shapes(name):
+    m, cycles = 120, 5
+    a = list(streams.make_stream(name, m, cycles, seed=7))
+    b = list(streams.make_stream(name, m, cycles, seed=7))
+    c = list(streams.make_stream(name, m, cycles, seed=8))
+    assert len(a) == cycles
+    for xa, xb in zip(a, b):
+        np.testing.assert_array_equal(xa, xb)
+    assert any(not np.array_equal(xa, xc) for xa, xc in zip(a, c))
+    for obs in a:
+        assert obs.shape == (m,)
+        assert (obs >= 0).all() and (obs < 1).all()
+        assert (np.diff(obs) >= 0).all()
+
+
+# ---------------------------------------------------------------------------
+# Engine: every scenario, >= 6 cycles, correctness + rebalance invariants.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", streams.available())
+def test_engine_runs_scenario_and_matches_one_shot(name):
+    # Additive Schwarz converges slowly on cycles where the observation
+    # mass is split across far-apart subdomain interfaces (bursty_clusters
+    # mid-run, storm_front's post-storm bimodal network); 1500 iterations
+    # covers the worst registered scenario at this size.
+    eng = AssimilationEngine(small_config(iters=1500))
+    journal = eng.run_scenario(name, m=160, cycles=CYCLES, seed=0)
+    assert len(journal) == CYCLES
+    for r in journal.records:
+        # Engine analysis == per-cycle one-shot solve to tolerance.
+        assert r.error_vs_direct < 1e-8, (name, r.cycle, r.error_vs_direct)
+        assert sum(r.loads) == 160
+        # Wherever a repartition fired, post-migration imbalance is under
+        # the configured threshold.
+        if r.repartitioned:
+            assert r.imbalance <= THRESHOLD, (name, r.cycle, r.loads)
+    assert eng.analysis is not None and eng.analysis.shape == (64,)
+
+
+def test_rebalancing_beats_static_on_drifting_swarm():
+    runs = {}
+    for rebalance in (True, False):
+        eng = AssimilationEngine(small_config(rebalance=rebalance,
+                                              track_reference=False))
+        runs[rebalance] = eng.run_scenario("drifting_swarm", m=160,
+                                           cycles=CYCLES, seed=0)
+    imb_dydd = np.mean(runs[True].imbalance_trajectory)
+    imb_static = np.mean(runs[False].imbalance_trajectory)
+    assert runs[False].repartition_count == 0
+    assert runs[True].repartition_count >= 1
+    assert imb_dydd < imb_static
+
+
+def test_double_buffer_matches_serial_execution():
+    outs = {}
+    for db in (True, False):
+        eng = AssimilationEngine(small_config(double_buffer=db,
+                                              track_reference=False))
+        journal = eng.run_scenario("bursty_clusters", m=160, cycles=CYCLES,
+                                   seed=3)
+        outs[db] = (np.asarray(eng.analysis), journal)
+    np.testing.assert_array_equal(outs[True][0], outs[False][0])
+    for a, b in zip(outs[True][1].records, outs[False][1].records):
+        assert a.loads == b.loads
+        assert a.repartitioned == b.repartitioned
+        assert a.migrated == b.migrated
+        assert a.imbalance == b.imbalance
+
+
+def test_empty_subdomain_always_fires_dd_step():
+    """All observations in the right half: subdomains 0-1 are empty, so the
+    DD step must fire immediately even with an enormous threshold."""
+    def half_domain(m, cycles, seed):
+        rng = np.random.default_rng(seed)
+        for _ in range(cycles):
+            yield np.sort(rng.uniform(0.5, 1.0, m))
+
+    eng = AssimilationEngine(small_config(imbalance_threshold=1e9,
+                                          track_reference=False))
+    journal = eng.run(half_domain(160, 3, seed=0))
+    assert journal.records[0].repartitioned
+    assert all(v > 0 for v in journal.records[0].loads)
+
+
+def test_hysteresis_defers_repartition():
+    """A skewed-but-nowhere-empty network over threshold every cycle: with
+    hysteresis=3 the first repartition fires on cycle 2 (third cycle)."""
+    def skewed(m, cycles, seed):
+        rng = np.random.default_rng(seed)
+        for _ in range(cycles):
+            hot = rng.uniform(0.0, 0.25, (4 * m) // 5)
+            cold = rng.uniform(0.25, 1.0, m - len(hot))
+            yield np.sort(np.concatenate([hot, cold]))
+
+    eng = AssimilationEngine(small_config(hysteresis=3,
+                                          track_reference=False))
+    journal = eng.run(skewed(160, 5, seed=0))
+    fired = [r.cycle for r in journal.records if r.repartitioned]
+    assert journal.records[0].imbalance_before > THRESHOLD
+    assert fired and fired[0] == 2, fired
+
+
+def test_static_mode_never_repartitions():
+    eng = AssimilationEngine(small_config(rebalance=False,
+                                          track_reference=False))
+    journal = eng.run_scenario("storm_front", m=160, cycles=CYCLES, seed=0)
+    assert journal.repartition_count == 0
+    assert journal.migrated_total == 0
+
+
+# ---------------------------------------------------------------------------
+# Metrics journal.
+# ---------------------------------------------------------------------------
+
+def test_imbalance_ratio():
+    assert imbalance_ratio([4, 4, 4, 4]) == 1.0
+    assert imbalance_ratio([8, 0, 0, 0]) == 4.0
+    assert imbalance_ratio([0, 0]) == 1.0
+
+
+def test_journal_json_roundtrip(tmp_path):
+    eng = AssimilationEngine(small_config(track_reference=False))
+    journal = eng.run_scenario("diurnal", m=120, cycles=3, seed=0)
+    d = json.loads(journal.to_json())
+    assert len(d["records"]) == 3
+    assert d["summary"]["cycles"] == 3
+    for key in ("repartitions", "migrated_total", "imbalance_max",
+                "cycle_time_mean"):
+        assert key in d["summary"]
+    path = tmp_path / "journal.json"
+    journal.save(str(path))
+    assert json.loads(path.read_text())["summary"]["cycles"] == 3
+
+
+def test_empty_journal_summary():
+    assert Journal().summary() == {"cycles": 0}
+
+
+# ---------------------------------------------------------------------------
+# Config validation.
+# ---------------------------------------------------------------------------
+
+def test_shardmap_without_mesh_raises():
+    with pytest.raises(ValueError, match="requires a mesh"):
+        AssimilationEngine(EngineConfig(solver="shardmap"))
+
+
+def test_unknown_solver_raises():
+    with pytest.raises(ValueError, match="unknown solver"):
+        AssimilationEngine(EngineConfig(solver="quantum"))
+
+
+def test_zero_hysteresis_raises():
+    with pytest.raises(ValueError, match="hysteresis"):
+        AssimilationEngine(EngineConfig(hysteresis=0))
+
+
+def test_sub_unity_threshold_raises():
+    with pytest.raises(ValueError, match="imbalance_threshold"):
+        AssimilationEngine(EngineConfig(imbalance_threshold=0.5))

@@ -1,7 +1,7 @@
 """Generic balancer API + the DyDD-balanced data pipeline (DESIGN.md §4)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_shim import given, settings, strategies as st
 
 from repro.core import balance, dydd
 from repro.data import pipeline, observations

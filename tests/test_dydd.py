@@ -1,7 +1,7 @@
 """DyDD scheduling/migration — paper §5, incl. the worked example."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_shim import given, settings, strategies as st
 
 from repro.core import dydd
 

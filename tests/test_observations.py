@@ -1,0 +1,46 @@
+"""Edge cases of the single-snapshot observation generators (paper §6)."""
+import numpy as np
+import pytest
+
+from repro.data import observations
+
+
+@pytest.mark.parametrize("kind", observations.KINDS)
+def test_deterministic_under_fixed_seed(kind):
+    a = observations.make_observations(400, kind=kind, seed=42)
+    b = observations.make_observations(400, kind=kind, seed=42)
+    np.testing.assert_array_equal(a, b)
+    c = observations.make_observations(400, kind=kind, seed=43)
+    assert not np.array_equal(a, c)
+
+
+def test_unknown_kind_raises():
+    with pytest.raises(ValueError, match="unknown observation kind"):
+        observations.make_observations(10, kind="volcano")
+
+
+def test_empty_subdomains_with_default_p_raises():
+    """p defaults to 1: asking to empty subdomain 0 would leave nowhere
+    for the observations to go — must be a clear error, not a bad array."""
+    with pytest.raises(ValueError, match="cannot empty every subdomain"):
+        observations.make_observations(10, empty_subdomains=(0,))
+
+
+def test_empty_subdomains_all_empty_raises():
+    with pytest.raises(ValueError, match="cannot empty every subdomain"):
+        observations.make_observations(10, empty_subdomains=(0, 1, 2), p=3)
+
+
+def test_empty_subdomains_out_of_range_raises():
+    with pytest.raises(ValueError, match="out of range"):
+        observations.make_observations(10, empty_subdomains=(7,), p=4)
+
+
+def test_empty_subdomains_are_empty():
+    obs = observations.make_observations(
+        600, kind="beta", seed=5, empty_subdomains=(1, 2), p=4)
+    counts = np.histogram(obs, bins=4, range=(0, 1))[0]
+    assert counts[1] == 0 and counts[2] == 0
+    assert counts.sum() == 600
+    assert (obs >= 0).all() and (obs < 1).all()
+    assert (np.diff(obs) >= 0).all()   # stays sorted

@@ -7,9 +7,16 @@ the subdomains whenever the moving observation network unbalances them —
 the configuration the paper's conclusion names as future work ("each
 subdomain to move independently with time").
 
+``--ndim 1`` (default) drives an Interval1D domain; ``--ndim 2`` drives a
+ShelfTiling2D (the paper's Ω ⊂ R² setting) and prints the per-cell load
+table before/after each rebalance.
+
   PYTHONPATH=src python examples/dydd_assimilation.py
   PYTHONPATH=src python examples/dydd_assimilation.py \
       --n 96 --m 200 --cycles 4 --scenarios drifting_swarm   # CI smoke
+  PYTHONPATH=src python examples/dydd_assimilation.py \
+      --ndim 2 --nx 12 --ny 8 --pr 2 --pc 2 --m 200 --cycles 2 \
+      --scenarios rotating_swarm                             # 2D CI smoke
 """
 import argparse
 
@@ -17,18 +24,42 @@ import jax
 
 jax.config.update("jax_enable_x64", True)
 
+import numpy as np  # noqa: E402
+
 from repro.assim import AssimilationEngine, EngineConfig, streams  # noqa: E402
 
 
+def make_config(args) -> EngineConfig:
+    common = dict(iters=args.iters, rebalance=not args.static,
+                  imbalance_threshold=args.threshold,
+                  hysteresis=args.hysteresis, track_reference=True)
+    if args.ndim == 1:
+        return EngineConfig(n=args.n, p=args.p, **common)
+    return EngineConfig(ndim=2, nx=args.nx, ny=args.ny, pr=args.pr,
+                        pc=args.pc, damping=args.damping, **common)
+
+
+def print_load_table(eng, rec) -> None:
+    """Per-cell loads before/after the cycle's rebalance, as pr x pc grids."""
+    before = eng.domain.load_table(rec.loads_before)
+    after = eng.domain.load_table(rec.loads)
+    rows = []
+    for rb, ra in zip(np.atleast_2d(before), np.atleast_2d(after)):
+        rows.append("  " + " ".join(f"{v:5d}" for v in rb)
+                    + "   ->   " + " ".join(f"{v:5d}" for v in ra))
+    print(f"  cycle {rec.cycle} cell loads (before -> after rebalance):")
+    print("\n".join(rows))
+
+
 def run_scenario(name: str, args) -> None:
-    cfg = EngineConfig(n=args.n, p=args.p, iters=args.iters,
-                       rebalance=not args.static,
-                       imbalance_threshold=args.threshold,
-                       hysteresis=args.hysteresis,
-                       track_reference=True)
+    cfg = make_config(args)
     eng = AssimilationEngine(cfg)
+    dom = eng.journal.meta
+    shape = (f"p={dom['p']}" if args.ndim == 1
+             else f"{dom['pr']}x{dom['pc']} cells on a "
+                  f"{dom['nx']}x{dom['ny']} mesh")
     print(f"\n=== {name} ({'static DD' if args.static else 'DyDD'}, "
-          f"p={cfg.p}, m={args.m}, {args.cycles} cycles) ===")
+          f"{shape}, m={args.m}, {args.cycles} cycles) ===")
     print(f"{'cycle':>5s} {'imb_in':>7s} {'imb_out':>7s} {'E':>6s} "
           f"{'rep':>4s} {'moved':>6s} {'t_cycle':>8s} {'err_DD-DA':>10s}")
     journal = eng.run_scenario(name, m=args.m, cycles=args.cycles,
@@ -38,6 +69,8 @@ def run_scenario(name: str, args) -> None:
               f"{r.efficiency:6.3f} {'yes' if r.repartitioned else '-':>4s} "
               f"{r.migrated:6d} {r.cycle_time * 1e3:7.1f}ms "
               f"{r.error_vs_direct:10.2e}")
+        if args.ndim == 2 and r.repartitioned:
+            print_load_table(eng, r)
     s = journal.summary()
     print(f"summary: {s['repartitions']} repartitions, "
           f"{s['migrated_total']} observations migrated, "
@@ -47,9 +80,18 @@ def run_scenario(name: str, args) -> None:
 
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--n", type=int, default=512, help="state dimension")
+    ap.add_argument("--ndim", type=int, default=1, choices=(1, 2),
+                    help="domain dimension: 1 = interval, 2 = shelf tiling")
+    ap.add_argument("--n", type=int, default=512, help="1D state dimension")
+    ap.add_argument("--p", type=int, default=8, help="1D subdomains")
+    ap.add_argument("--nx", type=int, default=24, help="2D mesh width")
+    ap.add_argument("--ny", type=int, default=12, help="2D mesh height")
+    ap.add_argument("--pr", type=int, default=2, help="2D strip count")
+    ap.add_argument("--pc", type=int, default=4, help="2D cells per strip")
+    ap.add_argument("--damping", type=float, default=0.7,
+                    help="additive-Schwarz damping (2D tilings converge "
+                    "with under-relaxation)")
     ap.add_argument("--m", type=int, default=800, help="observations/cycle")
-    ap.add_argument("--p", type=int, default=8, help="subdomains")
     ap.add_argument("--cycles", type=int, default=6)
     ap.add_argument("--iters", type=int, default=120)
     ap.add_argument("--seed", type=int, default=0)
@@ -61,10 +103,16 @@ def main() -> None:
                     help="disable DyDD (static-DD baseline)")
     ap.add_argument("--scenarios", nargs="*", default=None,
                     choices=streams.available(),
-                    help="subset of the registered scenarios (default: all)")
+                    help="subset of the registered scenarios "
+                    "(default: all of this --ndim)")
     args = ap.parse_args()
 
-    for name in args.scenarios or streams.available():
+    names = args.scenarios or streams.available(ndim=args.ndim)
+    for name in names:
+        if streams.get(name).ndim != args.ndim:
+            raise SystemExit(
+                f"scenario {name!r} is {streams.get(name).ndim}D; "
+                f"pass --ndim {streams.get(name).ndim}")
         run_scenario(name, args)
 
 

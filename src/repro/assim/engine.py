@@ -3,13 +3,16 @@
 The engine consumes an observation stream cycle by cycle and, per cycle:
 
   1. counts the incoming observations against the *current* subdomain
-     boundaries and decides — threshold + hysteresis, see
-     :class:`EngineConfig` — whether to fire a DyDD repartition
-     (``dydd_1d``: DD-step for empty subdomains, Hu–Blake–Emerson
-     diffusion scheduling, geometric boundary migration);
+     boundaries of its :class:`~repro.core.domain.Domain` and decides —
+     threshold + hysteresis, see :class:`EngineConfig` — whether to fire a
+     DyDD repartition (DD-step for empty subdomains, Hu–Blake–Emerson
+     diffusion scheduling on the domain's processor graph, geometric
+     boundary migration — ``dydd_1d`` on an :class:`Interval1D`,
+     ``dydd_2d``'s per-axis passes on a :class:`ShelfTiling2D`);
   2. decomposes the state index set on the (possibly moved) boundaries and
-     packs the local operator blocks + Cholesky factors
-     (``ddkf.pack_operator`` — the expensive host-side work);
+     packs the local operator blocks — host-side slicing plus the batched
+     device-side normal-matrix/Cholesky build (``ddkf.pack_operator``,
+     ``kernels.ops.gram``);
   3. injects the cycle's right-hand side (background carried forward from
      the previous analysis + fresh observation data) and runs the sharded
      DD-KF solve (``ddkf.solve_vmapped`` / ``solve_shardmap``);
@@ -35,8 +38,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import cls as cls_mod
-from repro.core import dd as dd_mod
 from repro.core import ddkf as ddkf_mod
+from repro.core import domain as domain_mod
 from repro.core import dydd as dydd_mod
 from repro.assim import streams as streams_mod
 from repro.assim.metrics import CycleMetrics, Journal, imbalance_ratio
@@ -45,6 +48,14 @@ from repro.assim.metrics import CycleMetrics, Journal, imbalance_ratio
 @dataclasses.dataclass(frozen=True)
 class EngineConfig:
     """Streaming DD-KF engine configuration.
+
+    Domain selection: ``ndim=1`` (default) runs on an
+    :class:`~repro.core.domain.Interval1D` with ``p`` subdomains over an
+    ``n``-point mesh; ``ndim=2`` runs on a
+    :class:`~repro.core.domain.ShelfTiling2D` of ``pr x pc`` cells over an
+    ``nx x ny`` raster mesh (``nx``/``ny`` default to the most-square
+    factoring of ``n``).  An explicit ``domain=`` handed to the engine
+    overrides all of these.
 
     Rebalance trigger policy: a repartition fires at the start of a cycle
     when EITHER (a) some subdomain would receive zero observations (the
@@ -57,7 +68,12 @@ class EngineConfig:
     """
 
     n: int = 256                      # state dimension
-    p: int = 4                        # subdomains (= processors)
+    p: int = 4                        # subdomains (= processors), 1D
+    ndim: int = 1                     # 1 = Interval1D, 2 = ShelfTiling2D
+    pr: int = 2                       # 2D: strip count
+    pc: int = 2                       # 2D: cells per strip
+    nx: Optional[int] = None          # 2D: mesh width (default: factor n)
+    ny: Optional[int] = None          # 2D: mesh height
     overlap: int = 0                  # shared columns between neighbours
     mu: float = 1.0                   # overlap regularization
     iters: int = 120                  # DD-KF Schwarz iterations per cycle
@@ -74,6 +90,26 @@ class EngineConfig:
     solver: str = "vmapped"           # "vmapped" | "shardmap"
 
 
+def _domain_from_config(cfg: EngineConfig) -> domain_mod.Domain:
+    if cfg.ndim == 1:
+        return domain_mod.Interval1D(n=cfg.n, p=cfg.p)
+    if cfg.ndim == 2:
+        nx, ny = cfg.nx, cfg.ny
+        if nx is None and ny is None:
+            nx, ny = domain_mod.factor_mesh(cfg.n)
+        elif nx is None or ny is None:
+            # One axis given: the other must complete cfg.n exactly.
+            given = nx if nx is not None else ny
+            if given < 1 or cfg.n % given:
+                raise ValueError(
+                    f"mesh axis {given} does not divide n={cfg.n}; give "
+                    f"both nx and ny or a divisor of n")
+            nx, ny = (given, cfg.n // given) if nx is not None \
+                else (cfg.n // given, given)
+        return domain_mod.ShelfTiling2D(nx=nx, ny=ny, pr=cfg.pr, pc=cfg.pc)
+    raise ValueError(f"ndim must be 1 or 2 (got {cfg.ndim})")
+
+
 @dataclasses.dataclass
 class _Prepared:
     """Host-side work for one cycle, computable before cycle t-1 finishes."""
@@ -85,6 +121,7 @@ class _Prepared:
     H1: np.ndarray
     y1: np.ndarray                # observation data (truth-driven)
     loads: np.ndarray             # post-repartition per-subdomain counts
+    loads_before: np.ndarray      # counts against the incoming boundaries
     imbalance_before: float
     repartitioned: bool
     migrated: int
@@ -93,13 +130,17 @@ class _Prepared:
 
 
 class AssimilationEngine:
-    """Multi-cycle DD-KF with online DyDD rebalancing.
+    """Multi-cycle DD-KF with online DyDD rebalancing on a Domain.
 
     Usage::
 
         cfg = EngineConfig(n=128, p=4, rebalance=True)
         eng = AssimilationEngine(cfg)
         journal = eng.run(streams.make_stream("drifting_swarm", 400, 6))
+
+        cfg2d = EngineConfig(ndim=2, nx=16, ny=8, pr=2, pc=2)
+        journal = AssimilationEngine(cfg2d).run_scenario(
+            "rotating_swarm", m=400, cycles=6)
 
     The analysis of cycle t is carried as the background of cycle t+1
     (persistence forecast by default; pass ``forecast`` to override).
@@ -108,7 +149,8 @@ class AssimilationEngine:
 
     def __init__(self, config: EngineConfig,
                  forecast: Optional[Callable] = None,
-                 mesh=None, mesh_axis: str = "sub"):
+                 mesh=None, mesh_axis: str = "sub",
+                 domain: Optional[domain_mod.Domain] = None):
         self.cfg = config
         self.forecast = forecast or (lambda x: x)
         self.mesh = mesh
@@ -126,14 +168,24 @@ class AssimilationEngine:
                 f"imbalance_threshold is a max/mean ratio and must be "
                 f">= 1.0 (got {config.imbalance_threshold})")
 
-        self.boundaries = np.linspace(0.0, 1.0, config.p + 1)
-        self.journal = Journal()
+        self.domain = domain if domain is not None \
+            else _domain_from_config(config)
+        if self.domain.ndim != 1 and config.overlap != 0:
+            raise ValueError("overlap > 0 is only supported on 1D domains")
+        self.n = self.domain.n
+        self.p = self.domain.p
+        self.journal = Journal(meta=self.domain.describe())
         self.analysis: Optional[jax.Array] = None
-        self._H0 = cls_mod.state_operator(config.n, smooth=config.smooth)
+        self._H0 = cls_mod.state_operator(self.n, smooth=config.smooth)
         self._rng = np.random.default_rng(config.seed)
-        self._truth = self._rng.normal(size=config.n)
+        self._truth = self._rng.normal(size=self.n)
         self._streak = 0  # consecutive over-threshold cycles
         self._t_last = time.perf_counter()
+
+    @property
+    def boundaries(self):
+        """1D compatibility view of the domain's interval edges."""
+        return getattr(self.domain, "boundaries", None)
 
     # -- rebalance trigger policy ------------------------------------------
 
@@ -161,36 +213,39 @@ class AssimilationEngine:
         cfg = self.cfg
         obs = np.asarray(obs, dtype=np.float64)
 
-        loads_in = dydd_mod._counts(obs, self.boundaries)
+        loads_in = self.domain.counts(obs)
         imb_before = imbalance_ratio(loads_in)
         repartitioned, migrated, rounds = False, 0, 0
         if self._should_rebalance(loads_in):
-            res = dydd_mod.dydd_1d(obs, cfg.p,
-                                   boundaries=self.boundaries.copy())
-            self.boundaries = res.boundaries
+            info = self.domain.rebalance(obs)
             repartitioned = True
-            migrated = res.total_movement
-            rounds = res.rounds
-        loads = dydd_mod._counts(obs, self.boundaries)
+            migrated = info.migrated
+            rounds = info.rounds
+        loads = self.domain.counts(obs)
 
-        dec = dd_mod.decompose_1d(cfg.n, self.boundaries,
-                                  overlap=cfg.overlap)
-        H1 = cls_mod.observation_operator(cfg.n, obs)
+        dec = self.domain.decomposition(overlap=cfg.overlap)
+        H1 = cls_mod.observation_operator(self.n,
+                                          self.domain.obs_positions(obs),
+                                          block=self.domain.row_size)
         A = np.concatenate([self._H0, H1], axis=0)
         r = np.ones((A.shape[0],))
         packed_op = ddkf_mod.pack_operator(jnp.asarray(A), jnp.asarray(r),
                                            dec, mu=cfg.mu)
+        # The batched factor build runs on device; block here (still on
+        # the worker thread under double buffering) so pack_time is honest.
+        jax.block_until_ready(packed_op.L_loc)
 
         # Truth-driven observation data: the truth random-walks each cycle
         # (deterministic under cfg.seed, independent of any solve result —
         # which is what makes this whole method pipelineable).
         self._truth = ((1.0 - cfg.truth_drift) * self._truth
-                       + cfg.truth_drift * self._rng.normal(size=cfg.n))
+                       + cfg.truth_drift * self._rng.normal(size=self.n))
         y1 = H1 @ self._truth + cfg.obs_noise * self._rng.normal(
             size=H1.shape[0])
 
         return _Prepared(cycle=cycle, obs=obs, packed_op=packed_op,
                          H0=self._H0, H1=H1, y1=y1, loads=loads,
+                         loads_before=loads_in,
                          imbalance_before=imb_before,
                          repartitioned=repartitioned, migrated=migrated,
                          rounds=rounds,
@@ -201,7 +256,7 @@ class AssimilationEngine:
     def _solve(self, prep: _Prepared):
         """Returns (analysis, background) for the cycle."""
         cfg = self.cfg
-        background = (np.zeros(cfg.n) if self.analysis is None
+        background = (np.zeros(self.n) if self.analysis is None
                       else np.asarray(self.forecast(self.analysis)))
         y0 = prep.H0 @ background
         packed = ddkf_mod.with_rhs(prep.packed_op,
@@ -264,6 +319,11 @@ class AssimilationEngine:
     def run_scenario(self, name: str, m: int, cycles: int,
                      seed: int = 0, **kw) -> Journal:
         """Convenience: run a registered stream scenario end to end."""
+        spec = streams_mod.get(name)
+        if spec.ndim != self.domain.ndim:
+            raise ValueError(
+                f"scenario {name!r} is {spec.ndim}D but the engine domain "
+                f"is {self.domain.ndim}D")
         return self.run(streams_mod.make_stream(name, m, cycles,
                                                 seed=seed, **kw))
 
@@ -285,6 +345,7 @@ class AssimilationEngine:
         self.journal.append(CycleMetrics(
             cycle=prep.cycle,
             loads=[int(v) for v in prep.loads],
+            loads_before=[int(v) for v in prep.loads_before],
             imbalance=imbalance_ratio(prep.loads),
             imbalance_before=prep.imbalance_before,
             efficiency=dydd_mod.balance_ratio(prep.loads),

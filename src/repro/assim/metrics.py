@@ -28,6 +28,7 @@ class CycleMetrics:
 
     cycle: int
     loads: list                 # per-subdomain observation counts (post-DD)
+    loads_before: list          # counts against the *incoming* boundaries
     imbalance: float            # max/mean after any repartition this cycle
     imbalance_before: float     # max/mean against the incoming boundaries
     efficiency: float           # paper's E = min/max after repartition
@@ -46,14 +47,25 @@ class CycleMetrics:
     def to_dict(self) -> dict:
         d = dataclasses.asdict(self)
         d["loads"] = [int(v) for v in self.loads]
+        d["loads_before"] = [int(v) for v in self.loads_before]
+        # nan (error untracked) is not valid JSON — serialize as null.
+        if not np.isfinite(self.error_vs_direct):
+            d["error_vs_direct"] = None
         return d
 
 
 @dataclasses.dataclass
 class Journal:
-    """Append-only per-cycle record list with summary statistics."""
+    """Append-only per-cycle record list with summary statistics.
+
+    ``meta`` carries the domain descriptor (``Domain.describe()`` — ndim,
+    mesh shape, tiling) so a serialized journal is self-describing: 2D
+    consumers can reshape the flat per-subdomain ``loads`` back into the
+    pr x pc cell table.
+    """
 
     records: List[CycleMetrics] = dataclasses.field(default_factory=list)
+    meta: dict = dataclasses.field(default_factory=dict)
 
     def append(self, rec: CycleMetrics) -> None:
         self.records.append(rec)
@@ -91,12 +103,17 @@ class Journal:
             "imbalance_mean": float(imb.mean()),
             "cycle_time_mean": float(times.mean()),
             "cycle_time_max": float(times.max()),
+            "pack_time_mean": float(np.mean(
+                [r.pack_time for r in self.records])),
+            "solve_time_mean": float(np.mean(
+                [r.solve_time for r in self.records])),
             "error_max": float(np.nanmax(errs)) if np.isfinite(
-                errs).any() else float("nan"),
+                errs).any() else None,
         }
 
     def to_dict(self) -> dict:
-        return {"records": [r.to_dict() for r in self.records],
+        return {"meta": dict(self.meta),
+                "records": [r.to_dict() for r in self.records],
                 "summary": self.summary()}
 
     def to_json(self, **kw) -> str:

@@ -1,31 +1,35 @@
 """Observation-stream scenarios for the streaming assimilation engine.
 
 A *stream* is a named, seeded generator of per-cycle observation locations
-in [0, 1) — the moving observation network the paper's conclusion names as
-future work.  Every scenario is registered under a name so engines, tests
-and benchmarks can sweep the whole registry:
+— the moving observation network the paper's conclusion names as future
+work.  Scenarios declare the dimension of their domain: a 1D scenario
+yields sorted ``(m,)`` arrays in [0, 1); a 2D scenario yields ``(m, 2)``
+arrays in [0, 1)², lexicographically sorted by (y, x).  Every scenario is
+registered under a name so engines, tests and benchmarks can sweep the
+registry:
 
-    for name in streams.available():
+    for name in streams.available(ndim=2):
         for obs in streams.make_stream(name, m=400, cycles=6, seed=0):
-            ...  # obs is a sorted (m,) float array in [0, 1)
+            ...  # obs is a lex-sorted (m, 2) float array in [0, 1)^2
 
 Adding a scenario is one decorated function::
 
-    @register("my_scenario")
+    @register("my_scenario", ndim=2)
     def my_scenario(m, cycles, seed):
         rng = np.random.default_rng(seed)
         for c in range(cycles):
-            yield np.sort(rng.uniform(0, 1, m))
+            yield _finalize_2d(rng.uniform(0, 1, (m, 2)))
 
-Contract: a scenario must be deterministic under a fixed ``seed``, yield
-exactly ``cycles`` arrays of shape ``(m,)``, sorted, with every location
-in [0, 1).  ``tests/test_assim.py`` enforces this for every registered
-name, so a new scenario gets its determinism/shape coverage for free.
+Contract: a scenario must be deterministic under a fixed ``seed`` and
+yield exactly ``cycles`` arrays of shape ``(m,)`` (sorted) for ``ndim=1``
+or ``(m, 2)`` (lex-sorted by y then x) for ``ndim=2``, every location in
+[0, 1).  ``tests/test_assim.py`` enforces this for every registered name,
+so a new scenario gets its determinism/shape coverage for free.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Iterator
+from typing import Callable, Iterator, Optional
 
 import numpy as np
 
@@ -39,25 +43,31 @@ class StreamSpec:
     name: str
     fn: Callable[..., Iterator[np.ndarray]]
     doc: str
+    ndim: int = 1
 
 
 _REGISTRY: dict = {}
 
 
-def register(name: str):
-    """Register a scenario generator under ``name``."""
+def register(name: str, ndim: int = 1):
+    """Register a scenario generator under ``name`` for an ndim-D domain."""
+    if ndim not in (1, 2):
+        raise ValueError(f"ndim must be 1 or 2 (got {ndim})")
+
     def deco(fn):
         if name in _REGISTRY:
             raise ValueError(f"stream scenario {name!r} already registered")
         _REGISTRY[name] = StreamSpec(name=name, fn=fn,
-                                     doc=(fn.__doc__ or "").strip())
+                                     doc=(fn.__doc__ or "").strip(),
+                                     ndim=ndim)
         return fn
     return deco
 
 
-def available() -> tuple:
-    """Sorted names of all registered scenarios."""
-    return tuple(sorted(_REGISTRY))
+def available(ndim: Optional[int] = None) -> tuple:
+    """Sorted names of registered scenarios, optionally filtered by ndim."""
+    return tuple(sorted(n for n, s in _REGISTRY.items()
+                        if ndim is None or s.ndim == ndim))
 
 
 def get(name: str) -> StreamSpec:
@@ -71,12 +81,13 @@ def make_stream(name: str, m: int, cycles: int, seed: int = 0,
                 **kw) -> Iterator[np.ndarray]:
     """Instantiate scenario ``name`` as an iterator of per-cycle locations."""
     spec = get(name)
+    want_shape = (m,) if spec.ndim == 1 else (m, 2)
 
     def checked():
         count = 0
         for obs in spec.fn(m, cycles, seed, **kw):
             obs = np.asarray(obs, dtype=np.float64)
-            assert obs.shape == (m,), (name, obs.shape)
+            assert obs.shape == want_shape, (name, obs.shape)
             yield obs
             count += 1
         assert count == cycles, (name, count, cycles)
@@ -88,8 +99,14 @@ def _finalize(obs: np.ndarray) -> np.ndarray:
     return np.sort(np.clip(obs, 0.0, np.nextafter(1.0, 0.0)))
 
 
+def _finalize_2d(pts: np.ndarray) -> np.ndarray:
+    """Clip to [0, 1)² and lex-sort by (y, x) for determinism."""
+    pts = np.clip(pts, 0.0, np.nextafter(1.0, 0.0))
+    return pts[np.lexsort((pts[:, 0], pts[:, 1]))]
+
+
 # ---------------------------------------------------------------------------
-# Scenarios.
+# 1D scenarios.
 # ---------------------------------------------------------------------------
 
 @register("drifting_swarm")
@@ -167,3 +184,89 @@ def storm_front(m, cycles, seed, background_frac=0.3):
             rng.uniform(0.0, 0.05, m_bg - (2 * m_bg) // 3),
         ])
         yield _finalize(np.concatenate([storm, bg]))
+
+
+# ---------------------------------------------------------------------------
+# 2D scenarios (the paper's Ω ⊂ R² setting, Figures 1-4).
+# ---------------------------------------------------------------------------
+
+@register("storm_front_2d", ndim=2)
+def storm_front_2d(m, cycles, seed, background_frac=0.25):
+    """A storm front sweeping the plane diagonally (lower-left to
+    upper-right): a dense band of sensors rides the front line while a
+    sparse background survives only ahead of it.  The front keeps moving
+    through the final cycle, so a static tiling ends badly unbalanced."""
+    rng = np.random.default_rng(seed)
+    for c in range(cycles):
+        t = c / max(cycles - 1, 1)
+        d = 0.15 + 0.7 * t                      # front offset along x + y
+        m_front = int(m * (1.0 - background_frac))
+        m_bg = m - m_front
+        # Band perpendicular to the (1, 1) sweep direction.
+        along = rng.uniform(-0.5, 0.5, m_front)
+        across = 0.03 * rng.normal(size=m_front)
+        fx = d + along + across
+        fy = d - along + across
+        # Background only ahead of the front (x + y > 2d).
+        bx = rng.uniform(0, 1, 4 * m_bg)
+        by = rng.uniform(0, 1, 4 * m_bg)
+        ahead = np.where(bx + by > 2 * d)[0][:m_bg]
+        if ahead.size < m_bg:  # late cycles: fall back to the far corner
+            extra = m_bg - ahead.size
+            bx = np.concatenate([bx[ahead], rng.uniform(0.9, 1.0, extra)])
+            by = np.concatenate([by[ahead], rng.uniform(0.9, 1.0, extra)])
+        else:
+            bx, by = bx[ahead], by[ahead]
+        pts = np.stack([np.concatenate([fx, bx]),
+                        np.concatenate([fy, by])], axis=1)
+        yield _finalize_2d(pts)
+
+
+@register("rotating_swarm", ndim=2)
+def rotating_swarm(m, cycles, seed, radius=0.3, width=0.06):
+    """A tight sensor swarm orbiting the domain center — every cycle the
+    mass sits in a different cell of any static tiling."""
+    rng = np.random.default_rng(seed)
+    for c in range(cycles):
+        phase = 2.0 * np.pi * c / max(cycles, 1)
+        cx = 0.5 + radius * np.cos(phase)
+        cy = 0.5 + radius * np.sin(phase)
+        pts = np.stack([cx + width * rng.normal(size=m),
+                        cy + width * rng.normal(size=m)], axis=1)
+        yield _finalize_2d(pts)
+
+
+@register("coastal_band", ndim=2)
+def coastal_band(m, cycles, seed, amplitude=0.2, width=0.05):
+    """A coastal observation band: sensors hug a sinusoidal 'shoreline'
+    whose phase drifts across the run (a shelf boundary shifting in both
+    axes — the Figure 2-4 configuration)."""
+    rng = np.random.default_rng(seed)
+    for c in range(cycles):
+        phase = 2.0 * np.pi * c / max(2 * cycles, 1)
+        x = rng.uniform(0, 1, m)
+        coast = 0.5 + amplitude * np.sin(2.0 * np.pi * x + phase) \
+            + 0.25 * (c / max(cycles - 1, 1))
+        y = coast + width * rng.normal(size=m)
+        yield _finalize_2d(np.stack([x, y], axis=1))
+
+
+@register("grid_dropout", ndim=2)
+def grid_dropout(m, cycles, seed, pr=2, pc=2):
+    """A uniform 2D sensor network that loses a growing rectangle of
+    pr x pc tiling cells mid-run — whole cells go empty (Figure 1's
+    configuration, exercising the empty-cell DD-step) and the outage
+    persists through the final cycle."""
+    rng = np.random.default_rng(seed)
+    lo = cycles // 3
+    for c in range(cycles):
+        pts = rng.uniform(0, 1, (m, 2))
+        if c >= lo:
+            # Dead rectangle of cells grows from the lower-left corner:
+            # first along x to the full row, then up rows — never the
+            # whole domain (the top strip always survives).
+            k = c - lo
+            kc = min(1 + k, pc)
+            kr = min(1 + max(k - (pc - 1), 0), max(pr - 1, 1))
+            pts = obs_mod.squeeze_out_of_rect(pts, kc / pc, kr / pr, rng)
+        yield _finalize_2d(pts)

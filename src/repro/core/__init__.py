@@ -1,2 +1,4 @@
-"""Core paper library: CLS, Kalman Filter, DD-CLS, DyDD (1D/2D), DD-KF."""
-from repro.core import balance, cls, dd, ddkf, dydd, dydd2d, kalman  # noqa: F401
+"""Core paper library: CLS, Kalman Filter, DD-CLS, DyDD (1D/2D), DD-KF,
+and the dimension-agnostic Domain layer."""
+from repro.core import (  # noqa: F401
+    balance, cls, dd, ddkf, domain, dydd, dydd2d, kalman)

@@ -124,12 +124,18 @@ def state_operator(n: int, smooth: float = 0.25):
     return np.concatenate([eye, smooth * d2], axis=0)
 
 
-def observation_operator(n: int, obs_locations, stencil: int = 3):
+def observation_operator(n: int, obs_locations, stencil: int = 3,
+                         block: int | None = None):
     """H1 of the paper's PDE setting: each observation at location
     ``obs_locations[k] in [0,1)`` maps to a ``stencil``-point interpolation
     row around the nearest mesh point — the row is *local to the subdomain
     containing the observation*, which is what makes DyDD's row balancing
-    meaningful.  Returns a numpy (m1, n) array."""
+    meaningful.  Returns a numpy (m1, n) array.
+
+    ``block`` confines each stencil window to the size-``block`` aligned
+    chunk of columns containing its center: on a raster-ordered 2D mesh
+    (``block = nx``) this stops a window near a mesh-row edge from leaking
+    onto the physically distant first column of the next row."""
     import numpy as np
     obs = np.asarray(obs_locations, dtype=np.float64)
     m1 = obs.shape[0]
@@ -137,8 +143,12 @@ def observation_operator(n: int, obs_locations, stencil: int = 3):
     centers = np.clip((obs * n).astype(np.int64), 0, n - 1)
     half = stencil // 2
     for kk in range(m1):
-        lo = max(0, centers[kk] - half)
-        hi = min(n, centers[kk] + half + 1)
+        lo, hi = 0, n
+        if block is not None:
+            lo = (centers[kk] // block) * block
+            hi = min(n, lo + block)
+        lo = max(lo, centers[kk] - half)
+        hi = min(hi, centers[kk] + half + 1)
         wts = np.exp(-0.5 * (np.arange(lo, hi) - obs[kk] * n) ** 2)
         H1[kk, lo:hi] = wts / wts.sum()
     return H1

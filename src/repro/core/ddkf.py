@@ -34,6 +34,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import cls as cls_mod
 from repro.core import dd as dd_mod
+from repro.kernels import ops as ops_mod
 
 
 @partial(jax.tree_util.register_dataclass,
@@ -67,15 +68,39 @@ def pack(prob: cls_mod.CLSProblem, dec: dd_mod.Decomposition,
     return with_rhs(pack_operator(A, r, dec, mu=mu), b)
 
 
+@partial(jax.jit, static_argnames=("gram_mode",))
+def _factor_batched(A_loc: jax.Array, r: jax.Array, diag_add: jax.Array,
+                    gram_mode: str = "auto") -> jax.Array:
+    """Batched local normal matrices + Cholesky factors, on device.
+
+    N_i = A_i^T diag(r) A_i comes from the ``kernels.ops.gram`` kernel
+    (Pallas on TPU, jnp reference elsewhere); ``diag_add`` carries the
+    mu-regularization on overlap slots plus the identity on padded slots
+    that keeps every factor nonsingular.
+    """
+    p = A_loc.shape[0]
+    N = ops_mod.gram(A_loc, jnp.broadcast_to(r, (p, r.shape[0])),
+                     mode=gram_mode)
+    N = N + jax.vmap(jnp.diag)(diag_add.astype(N.dtype))
+    return jax.vmap(jnp.linalg.cholesky)(N)
+
+
 def pack_operator(A: jax.Array, r: jax.Array, dec: dd_mod.Decomposition,
-                  mu: float = 1.0) -> PackedDD:
+                  mu: float = 1.0, gram_mode: str = "auto") -> PackedDD:
     """Pack the *operator* part of a decomposed CLS problem.
 
-    This is the expensive host-side work — slicing the p column blocks and
-    factoring the p local normal matrices — and it depends only on (A, r,
-    dec), not on the data vector b.  The streaming engine runs it for cycle
-    t+1 while the device is solving cycle t, then injects the cycle's rhs
-    with :func:`with_rhs` (a cheap ``dataclasses.replace``).
+    The host slices the p column blocks into the padded (p, m, w) layout;
+    the p local normal matrices N_i = A_i^T diag(r) A_i and their Cholesky
+    factors are then built *on device* in one batched shot
+    (:func:`_factor_batched`: ``kernels.ops.gram`` + ``vmap(cholesky)``)
+    instead of a per-subdomain ``np.linalg.cholesky`` Python loop.  The
+    packing depends only on (A, r, dec), not on the data vector b, so the
+    streaming engine runs it for cycle t+1 while the device is solving
+    cycle t, then injects the cycle's rhs with :func:`with_rhs` (a cheap
+    ``dataclasses.replace``).
+
+    ``gram_mode`` selects the kernel path ("auto": Pallas on TPU, jnp
+    reference elsewhere — see :mod:`repro.kernels.ops`).
 
     The returned ``PackedDD`` carries a zero rhs; pass it through
     :func:`with_rhs` before solving.
@@ -89,34 +114,31 @@ def pack_operator(A: jax.Array, r: jax.Array, dec: dd_mod.Decomposition,
         counts[np.asarray(c)] += 1
 
     A_loc = np.zeros((p, m, w), dtype=np.asarray(A).dtype)
-    L_loc = np.zeros((p, w, w), dtype=np.asarray(A).dtype)
     cols = -np.ones((p, w), dtype=np.int64)
     mask = np.zeros((p, w), dtype=np.asarray(A).dtype)
     muov = np.zeros((p, w), dtype=np.asarray(A).dtype)
     A_np = np.asarray(A)
-    r_np = np.asarray(r)
     for i, c in enumerate(dec.col_sets):
         c = np.asarray(c)
         k = c.shape[0]
         A_loc[i, :, :k] = A_np[:, c]
         cols[i, :k] = c
         mask[i, :k] = 1.0
-        N = (A_loc[i].T * r_np) @ A_loc[i]
         if dec.overlap > 0 and mu > 0.0:
-            ov = (counts[c] > 1).astype(N.dtype)
-            muov[i, :k] = mu * ov
-            N[:k, :k] += mu * np.diag(ov)
-        # Identity on padded slots keeps the factor nonsingular.
-        pad = np.arange(k, w)
-        N[pad, pad] = 1.0
-        L_loc[i] = np.linalg.cholesky(N)
+            muov[i, :k] = mu * (counts[c] > 1).astype(muov.dtype)
+    A_loc = jnp.asarray(A_loc)
+    r = jnp.asarray(r, A_loc.dtype)
+    # mu on overlap slots; identity on padded slots (mask == 0).
+    L_loc = _factor_batched(A_loc, r, jnp.asarray(muov + (1.0 - mask)),
+                            gram_mode=gram_mode)
     mult_at = np.maximum(counts, 1)[np.clip(cols, 0, n - 1)]
     wdiv = mask / mult_at
-    return PackedDD(A_loc=jnp.asarray(A_loc), L_loc=jnp.asarray(L_loc),
+    return PackedDD(A_loc=A_loc, L_loc=L_loc,
                     cols=jnp.asarray(cols), mask=jnp.asarray(mask),
                     muov=jnp.asarray(muov), wdiv=jnp.asarray(wdiv),
                     mult=jnp.asarray(np.maximum(counts, 1)).astype(A.dtype),
-                    r=r, b=jnp.zeros((m,), dtype=A.dtype), n=n, p=p, w=w)
+                    r=r, b=jnp.zeros((m,), dtype=A_loc.dtype), n=n, p=p,
+                    w=w)
 
 
 def with_rhs(packed: PackedDD, b: jax.Array) -> PackedDD:

@@ -7,16 +7,27 @@ draws: Figure 3 moves vertical edges between adjacent subdomains, Figure 1
 splits an overloaded neighbour of an empty cell — both are 1D migrations
 applied per axis.
 
-Balancing is two nested applications of the 1D machinery:
-  1. y-pass: strip loads → ``migrate_1d`` on the y-edges (chain graph of
-     strips),
-  2. x-pass: within each strip, cell loads → ``migrate_1d`` on that
-     strip's x-edges.
-Both passes move observations only between *adjacent* subdomains (the
-diffusion restriction), and the processor graph of the tiling is the
-pr × pc grid — ``dydd.grid_edges`` — on which the scheduling step is also
-validated (tests assert the geometric result matches the graph schedule's
-balance floor).
+Balancing is nested applications of the full 1D DyDD machinery
+(:func:`repro.core.dydd.dydd_1d`: DD-step for empty subdomains →
+Hu–Blake–Emerson diffusion scheduling → geometric migration):
+
+  1. y-pass: DyDD on the y coordinates over the chain of strips,
+  2. x-pass: within each strip, DyDD on that strip's x coordinates over
+     the chain of cells.
+
+The pass pair is iterated until the cell loads stop improving (the y-pass
+re-targets strip totals, which can shuffle strip membership and leave a
+residual the next pass removes), capped at ``max_rounds``; the actual
+round count is returned in :class:`DyDD2DResult`.  Both passes move
+observations only between *adjacent* subdomains (the diffusion
+restriction), and the processor graph of the tiling is the pr × pc grid —
+``dydd.grid_edges`` — on which the scheduling step is also validated
+(tests assert the geometric result matches the graph schedule's balance
+floor).
+
+With ``pr == 1`` the y-pass is a no-op and one round is exactly
+``dydd_1d`` on the x coordinates — the degenerate-dimension parity the
+domain layer (``repro.core.domain.ShelfTiling2D``) relies on.
 """
 from __future__ import annotations
 
@@ -34,6 +45,7 @@ class DyDD2DResult:
     loads_initial: np.ndarray    # (pr, pc)
     loads_final: np.ndarray     # (pr, pc)
     total_movement: int
+    rounds: int = 1              # y-pass/x-pass rounds actually run
 
     @property
     def efficiency(self) -> float:
@@ -55,43 +67,73 @@ def _counts_2d(obs: np.ndarray, y_edges: np.ndarray,
     return counts
 
 
-def dydd_2d(obs: np.ndarray, pr: int, pc: int,
-            max_rounds: int = 64) -> DyDD2DResult:
-    """Balance m observations (m, 2) in [0,1)² over a pr x pc tiling.
+def _pass_2d(obs: np.ndarray, pr: int, pc: int, y_edges: np.ndarray,
+             x_edges: np.ndarray):
+    """One y-pass + x-pass round of nested 1D DyDD.  Returns the moved
+    edges and the observation migration volume of the round."""
+    moved = 0
+    # --- y-pass: full 1D DyDD on strip loads (chain of strips) -----------
+    if pr > 1:
+        res_y = dydd.dydd_1d(obs[:, 1], pr, boundaries=y_edges.copy())
+        y_edges = res_y.boundaries
+        moved += res_y.total_movement
+    # --- x-pass: per strip, full 1D DyDD on cell loads --------------------
+    x_edges = x_edges.copy()
+    rows = np.clip(np.searchsorted(y_edges, obs[:, 1], side="right") - 1,
+                   0, pr - 1)
+    for r in range(pr):
+        xs = obs[rows == r, 0]
+        if xs.size == 0:
+            continue  # empty strip: nothing to place, keep its edges
+        res_x = dydd.dydd_1d(xs, pc, boundaries=x_edges[r].copy())
+        x_edges[r] = res_x.boundaries
+        moved += res_x.total_movement
+    return y_edges, x_edges, moved
 
-    Returns shifted shelf boundaries with every cell's load within integer
-    rounding of m/(pr·pc).
+
+def dydd_2d(obs: np.ndarray, pr: int, pc: int,
+            y_edges: np.ndarray | None = None,
+            x_edges: np.ndarray | None = None,
+            max_rounds: int = 8) -> DyDD2DResult:
+    """Balance m observations (m, 2) in [0,1)² over a pr x pc shelf tiling.
+
+    Starts from the given shelf boundaries (uniform if omitted — pass the
+    current edges to warm-start an online rebalance) and iterates the
+    y-pass/x-pass pair until every cell's load is within integer rounding
+    of m/(pr·pc) or the max deviation stops improving, at most
+    ``max_rounds`` times.
     """
     obs = np.asarray(obs, dtype=np.float64)
     assert obs.ndim == 2 and obs.shape[1] == 2
     m = obs.shape[0]
 
-    y_edges0 = np.linspace(0.0, 1.0, pr + 1)
-    x_edges0 = np.tile(np.linspace(0.0, 1.0, pc + 1), (pr, 1))
-    l_in = _counts_2d(obs, y_edges0, x_edges0)
+    y_edges = (np.linspace(0.0, 1.0, pr + 1) if y_edges is None
+               else np.asarray(y_edges, np.float64).copy())
+    x_edges = (np.tile(np.linspace(0.0, 1.0, pc + 1), (pr, 1))
+               if x_edges is None
+               else np.asarray(x_edges, np.float64).copy())
+    l_in = _counts_2d(obs, y_edges, x_edges)
 
-    # --- y-pass: balance strip loads via 1D migration on y ---------------
-    strip_target = np.array([m // pr + (1 if i < m % pr else 0)
-                             for i in range(pr)], np.int64)
-    y_edges = dydd.migrate_1d(obs[:, 1], y_edges0.copy(), strip_target)
-
-    # --- x-pass: per strip, balance cell loads on x -----------------------
-    x_edges = np.empty((pr, pc + 1))
-    rows = np.clip(np.searchsorted(y_edges, obs[:, 1], side="right") - 1,
-                   0, pr - 1)
-    for r in range(pr):
-        xs = np.sort(obs[rows == r, 0])
-        k = xs.shape[0]
-        cell_target = np.array([k // pc + (1 if j < k % pc else 0)
-                                for j in range(pc)], np.int64)
-        x_edges[r] = dydd.migrate_1d(xs, np.linspace(0, 1, pc + 1),
-                                     cell_target)
+    lbar = m / (pr * pc)
+    total_moved = 0
+    rounds = 0
+    best_dev = np.inf
+    for _ in range(max(1, max_rounds)):
+        y_new, x_new, moved = _pass_2d(obs, pr, pc, y_edges, x_edges)
+        dev = np.abs(_counts_2d(obs, y_new, x_new) - lbar).max()
+        if dev >= best_dev:
+            break  # no improvement: keep the previous round's edges
+        y_edges, x_edges = y_new, x_new
+        total_moved += moved
+        best_dev = dev
+        rounds += 1
+        if dev < 1.0:
+            break
 
     l_fin = _counts_2d(obs, y_edges, x_edges)
-    moved = int(np.abs(l_fin - l_in).sum() // 2)
     return DyDD2DResult(y_edges=y_edges, x_edges=x_edges,
                         loads_initial=l_in, loads_final=l_fin,
-                        total_movement=moved)
+                        total_movement=total_moved, rounds=rounds)
 
 
 def make_observations_2d(m: int, kind: str = "clustered",

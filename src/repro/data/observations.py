@@ -41,6 +41,37 @@ def squeeze_out_of_subdomains(obs: np.ndarray, empty_subdomains,
     return (np.asarray(allowed, dtype=np.float64)[idx] + frac) * w
 
 
+def squeeze_out_of_rect(pts: np.ndarray, x_hi: float, y_hi: float,
+                        rng: np.random.Generator) -> np.ndarray:
+    """Re-draw 2D points inside [0, x_hi) x [0, y_hi) uniformly into the
+    complementary L-shaped region — the 2D analogue of
+    :func:`squeeze_out_of_subdomains` (a rectangle of tiling cells goes
+    dark; Figure 1's empty-subdomain configuration).
+    """
+    if not (0.0 < x_hi <= 1.0 and 0.0 < y_hi <= 1.0):
+        raise ValueError(f"dead rectangle [0,{x_hi})x[0,{y_hi}) must lie "
+                         f"inside the unit square with positive extent")
+    if x_hi >= 1.0 and y_hi >= 1.0:
+        raise ValueError("cannot empty the whole domain: the dead "
+                         "rectangle covers [0,1)² and leaves nowhere for "
+                         "the observations")
+    pts = np.asarray(pts, dtype=np.float64).copy()
+    inside = (pts[:, 0] < x_hi) & (pts[:, 1] < y_hi)
+    k = int(inside.sum())
+    if k == 0:
+        return pts
+    # Exact area-weighted sampling over the two strips of the L:
+    # right strip [x_hi,1) x [0,1), top-left strip [0,x_hi) x [y_hi,1).
+    a_right = (1.0 - x_hi)
+    a_top = x_hi * (1.0 - y_hi)
+    right = rng.uniform(0, 1, k) < a_right / (a_right + a_top)
+    u, v = rng.uniform(0, 1, k), rng.uniform(0, 1, k)
+    xs = np.where(right, x_hi + (1.0 - x_hi) * u, x_hi * u)
+    ys = np.where(right, v, y_hi + (1.0 - y_hi) * v)
+    pts[inside] = np.stack([xs, ys], axis=1)
+    return pts
+
+
 def make_observations(m: int, kind: str = "beta", seed: int = 0,
                       empty_subdomains: tuple = (), p: int = 1) -> np.ndarray:
     """m observation locations in [0, 1).

@@ -1,0 +1,12 @@
+"""Version compatibility shims for the Pallas TPU API.
+
+``pltpu.CompilerParams`` was named ``TPUCompilerParams`` in older jax
+releases; resolve whichever this runtime ships so the kernels (and their
+interpret-mode CPU tests) work on both.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or pltpu.TPUCompilerParams

@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import _compat
+
 
 def _gram_kernel(a_ref, r_ref, o_ref, acc_ref, *, block_m: int,
                  m_total: int):
@@ -63,7 +65,7 @@ def gram(A, r, *, block_m: int = 256, interpret: bool = False):
         out_specs=pl.BlockSpec((1, w, w), lambda i, j: (i, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((p, w, w), A.dtype),
         scratch_shapes=[pltpu.VMEM((w, w), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_compat.CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(A, r)

@@ -65,8 +65,19 @@ def ssd_scan(x, dt, A, B, C, *, chunk: int = 256, mode: str = "auto"):
 
 def gram(A, r, *, mode: str = "auto", block_m: int = 256):
     """Batched weighted Gram N = A^T diag(r) A — the DD-KF normal-matrix
-    assembly hot spot (paper eq. 27)."""
+    assembly hot spot (paper eq. 27).  A: (p, m, w), r: (p, m).
+
+    float64 inputs always take the jnp reference under mode="auto" (the
+    MXU has no f64 path); for the native kernel the lane (w) axis is
+    zero-padded to the 128-lane tile and the result sliced back.
+    """
     m = _resolve(mode)
-    if m == "ref":
+    if m == "ref" or (mode == "auto" and A.dtype == jnp.float64):
         return _ref.gram_ref(A, r)
+    w = A.shape[-1]
+    wpad = -w % 128
+    if m == "kernel" and wpad:
+        A = jnp.pad(A, ((0, 0), (0, 0), (0, wpad)))
+        out = _gram.gram(A, r, block_m=block_m, interpret=False)
+        return out[:, :w, :w]
     return _gram.gram(A, r, block_m=block_m, interpret=(m == "interpret"))

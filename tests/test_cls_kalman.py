@@ -83,3 +83,19 @@ def test_local_problem_is_spatially_local():
     # every H1 row's support lies in the left half of the columns
     nz = np.nonzero(H1)[1]
     assert nz.max() < 32
+
+
+def test_observation_operator_block_confines_stencil():
+    """With block=nx (a raster-ordered 2D mesh) an interpolation window
+    near a mesh-row edge must not leak onto the next row's first column,
+    which is physically on the opposite side of the domain."""
+    n, nx = 24, 12
+    pos = [11.7 / n]  # center column 11, the last column of raster row 0
+    leaky = cls.observation_operator(n, pos)
+    assert leaky[0, nx:].sum() > 0  # unconfined: weight crosses the seam
+    H = cls.observation_operator(n, pos, block=nx)
+    assert H[0, nx:].sum() == 0.0
+    np.testing.assert_allclose(H[0].sum(), 1.0)
+    # block spanning the whole vector is a no-op (the 1D degenerate case)
+    np.testing.assert_array_equal(
+        cls.observation_operator(n, pos, block=n), leaky)

@@ -91,6 +91,58 @@ def test_ddkf_on_2d_decomposition():
     assert err < 1e-6, err
 
 
+def test_dydd_2d_reports_rounds_and_respects_cap():
+    obs = dydd2d.make_observations_2d(1200, kind="clustered", seed=7)
+    res = dydd2d.dydd_2d(obs, pr=3, pc=3, max_rounds=8)
+    assert 1 <= res.rounds <= 8
+    capped = dydd2d.dydd_2d(obs, pr=3, pc=3, max_rounds=1)
+    assert capped.rounds == 1
+    # more rounds can only do at least as well as the 1-round cap
+    assert res.efficiency >= capped.efficiency - 1e-12
+
+
+def test_dydd_2d_iterates_until_no_improvement():
+    """The y-pass/x-pass pair is iterated: the returned loads are within
+    integer rounding of the mean OR a further round would not improve."""
+    obs = dydd2d.make_observations_2d(900, kind="beta", seed=11)
+    res = dydd2d.dydd_2d(obs, pr=4, pc=4, max_rounds=8)
+    lbar = 900 / 16
+    dev = np.abs(res.loads_final - lbar).max()
+    if dev >= 1.0:
+        again = dydd2d.dydd_2d(obs, pr=4, pc=4,
+                               y_edges=res.y_edges, x_edges=res.x_edges,
+                               max_rounds=1)
+        dev2 = np.abs(again.loads_final - lbar).max()
+        assert dev2 >= dev - 1e-12
+
+
+def test_dydd_2d_warm_start_boundaries():
+    """Passing current shelf edges warm-starts the rebalance: the initial
+    loads are counted against them, and an already-balanced tiling needs
+    no movement."""
+    obs = dydd2d.make_observations_2d(800, kind="clustered", seed=2)
+    first = dydd2d.dydd_2d(obs, pr=2, pc=3)
+    warm = dydd2d.dydd_2d(obs, pr=2, pc=3,
+                          y_edges=first.y_edges, x_edges=first.x_edges)
+    np.testing.assert_array_equal(warm.loads_initial, first.loads_final)
+    assert warm.efficiency >= first.efficiency - 1e-12
+    assert warm.total_movement <= first.total_movement
+
+
+def test_dydd_2d_pr1_is_exactly_dydd_1d():
+    """Degenerate dimension: a 1 x pc shelf on 2D points with constant y
+    reproduces dydd_1d on the x coordinates exactly."""
+    rng = np.random.default_rng(5)
+    xs = np.sort(rng.beta(2, 5, 500))
+    obs2 = np.stack([xs, np.full_like(xs, 0.5)], axis=1)
+    res2 = dydd2d.dydd_2d(obs2, pr=1, pc=6)
+    res1 = dydd.dydd_1d(xs, 6)
+    np.testing.assert_array_equal(res2.x_edges[0], res1.boundaries)
+    np.testing.assert_array_equal(res2.loads_final.reshape(-1),
+                                  res1.loads_final)
+    assert res2.total_movement == res1.total_movement
+
+
 # ---------------------------------------------------------------------------
 # gram kernel.
 # ---------------------------------------------------------------------------

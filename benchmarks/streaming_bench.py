@@ -27,12 +27,14 @@ jax.config.update("jax_enable_x64", True)
 import numpy as np  # noqa: E402
 
 from repro.assim import AssimilationEngine, EngineConfig, streams  # noqa: E402
+from repro.kernels import ops  # noqa: E402
 
 
 def make_config(ndim: int, rebalance: bool, args) -> EngineConfig:
     common = dict(iters=args.iters, rebalance=rebalance,
                   imbalance_threshold=args.threshold,
-                  track_reference=args.track_reference)
+                  track_reference=args.track_reference,
+                  solver=args.solver, overlap=args.overlap)
     if ndim == 1:
         return EngineConfig(n=args.n, p=args.p, **common)
     return EngineConfig(ndim=2, nx=args.nx, ny=args.ny,
@@ -51,6 +53,8 @@ def run_arm(name: str, rebalance: bool, args) -> dict:
     imb = journal.imbalance_trajectory
     return {
         "rebalance": rebalance,
+        "solver": args.solver,
+        "overlap": args.overlap,
         "domain": journal.meta,
         "imbalance_trajectory": imb,
         "imbalance_final": imb[-1],
@@ -90,6 +94,11 @@ def main() -> None:
     ap.add_argument("--threshold", type=float, default=1.5)
     ap.add_argument("--track-reference", action="store_true",
                     help="also journal per-cycle error vs one-shot solve")
+    ap.add_argument("--solver", default="vmapped",
+                    choices=("vmapped", "shardmap"),
+                    help="shardmap needs one device per subdomain")
+    ap.add_argument("--overlap", type=int, default=0,
+                    help="Schwarz halo width")
     ap.add_argument("--scenarios", nargs="*", default=None,
                     choices=streams.available(),
                     help="subset of the registered scenarios "
@@ -103,7 +112,8 @@ def main() -> None:
         "config": {"n": args.n, "p": args.p, "nx": args.nx, "ny": args.ny,
                    "pr": args.pr, "pc": args.pc, "m": args.m,
                    "cycles": args.cycles, "iters": args.iters,
-                   "seed": args.seed, "threshold": args.threshold},
+                   "seed": args.seed, "threshold": args.threshold,
+                   "solver": args.solver, "overlap": args.overlap},
         "scenarios": {},
     }
     for name in names:
@@ -122,6 +132,10 @@ def main() -> None:
                 static["imbalance_final"]
                 / max(dydd["imbalance_final"], 1e-12)),
         }
+
+    # Autotuned gram reduction tiles (chosen block_m + timed sweep per
+    # packed shape; empty when every pack took the jnp reference path).
+    report["gram_autotune"] = ops.gram_tuning_report()
 
     text = json.dumps(report, indent=2)
     if args.out:

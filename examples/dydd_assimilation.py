@@ -17,6 +17,10 @@ table before/after each rebalance.
   PYTHONPATH=src python examples/dydd_assimilation.py \
       --ndim 2 --nx 12 --ny 8 --pr 2 --pc 2 --m 200 --cycles 2 \
       --scenarios rotating_swarm                             # 2D CI smoke
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+  PYTHONPATH=src python examples/dydd_assimilation.py \
+      --ndim 2 --pr 2 --pc 4 --overlap 1 --solver shardmap \
+      --scenarios rotating_swarm    # sharded: one device per tiling cell
 """
 import argparse
 
@@ -32,7 +36,8 @@ from repro.assim import AssimilationEngine, EngineConfig, streams  # noqa: E402
 def make_config(args) -> EngineConfig:
     common = dict(iters=args.iters, rebalance=not args.static,
                   imbalance_threshold=args.threshold,
-                  hysteresis=args.hysteresis, track_reference=True)
+                  hysteresis=args.hysteresis, track_reference=True,
+                  solver=args.solver, overlap=args.overlap)
     if args.ndim == 1:
         return EngineConfig(n=args.n, p=args.p, **common)
     return EngineConfig(ndim=2, nx=args.nx, ny=args.ny, pr=args.pr,
@@ -58,8 +63,11 @@ def run_scenario(name: str, args) -> None:
     shape = (f"p={dom['p']}" if args.ndim == 1
              else f"{dom['pr']}x{dom['pc']} cells on a "
                   f"{dom['nx']}x{dom['ny']} mesh")
+    solver = cfg.solver + (f" on mesh {dict(eng.mesh.shape)}"
+                           if eng.mesh is not None else "")
     print(f"\n=== {name} ({'static DD' if args.static else 'DyDD'}, "
-          f"{shape}, m={args.m}, {args.cycles} cycles) ===")
+          f"{shape}, overlap={cfg.overlap}, {solver}, m={args.m}, "
+          f"{args.cycles} cycles) ===")
     print(f"{'cycle':>5s} {'imb_in':>7s} {'imb_out':>7s} {'E':>6s} "
           f"{'rep':>4s} {'moved':>6s} {'t_cycle':>8s} {'err_DD-DA':>10s}")
     journal = eng.run_scenario(name, m=args.m, cycles=args.cycles,
@@ -101,6 +109,14 @@ def main() -> None:
                     help="consecutive over-threshold cycles before firing")
     ap.add_argument("--static", action="store_true",
                     help="disable DyDD (static-DD baseline)")
+    ap.add_argument("--solver", default="vmapped",
+                    choices=("vmapped", "shardmap"),
+                    help="shardmap needs one device per subdomain "
+                    "(set XLA_FLAGS=--xla_force_host_platform_device_"
+                    "count=<p> on CPU)")
+    ap.add_argument("--overlap", type=int, default=0,
+                    help="Schwarz halo width (mesh columns/rows absorbed "
+                    "from each grid-graph neighbour)")
     ap.add_argument("--scenarios", nargs="*", default=None,
                     choices=streams.available(),
                     help="subset of the registered scenarios "

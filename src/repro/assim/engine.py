@@ -41,6 +41,7 @@ from repro.core import cls as cls_mod
 from repro.core import ddkf as ddkf_mod
 from repro.core import domain as domain_mod
 from repro.core import dydd as dydd_mod
+from repro.core import _compat as compat_mod
 from repro.assim import streams as streams_mod
 from repro.assim.metrics import CycleMetrics, Journal, imbalance_ratio
 
@@ -56,6 +57,17 @@ class EngineConfig:
     ``nx x ny`` raster mesh (``nx``/``ny`` default to the most-square
     factoring of ``n``).  An explicit ``domain=`` handed to the engine
     overrides all of these.
+
+    Solver selection: ``solver="vmapped"`` (default) batches subdomains on
+    a leading axis of one device; ``solver="shardmap"`` runs one device
+    per subdomain on a mesh shaped like the domain's processor graph —
+    a (p,) chain in 1D, a (pr, pc) grid in 2D.  The engine builds the
+    mesh itself when the visible device count equals p (e.g. under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8``), or accepts
+    an explicit ``mesh=``; a device-count mismatch is rejected up front.
+    ``overlap`` (>= 0, validated here for every domain) is the Schwarz
+    halo width in mesh columns/rows absorbed from each grid-graph
+    neighbour, with ``mu`` the overlap regularization of eq. 25-26.
 
     Rebalance trigger policy: a repartition fires at the start of a cycle
     when EITHER (a) some subdomain would receive zero observations (the
@@ -149,16 +161,16 @@ class AssimilationEngine:
 
     def __init__(self, config: EngineConfig,
                  forecast: Optional[Callable] = None,
-                 mesh=None, mesh_axis: str = "sub",
+                 mesh=None, mesh_axis=None,
                  domain: Optional[domain_mod.Domain] = None):
         self.cfg = config
         self.forecast = forecast or (lambda x: x)
-        self.mesh = mesh
-        self.mesh_axis = mesh_axis
-        if config.solver == "shardmap" and mesh is None:
-            raise ValueError("solver='shardmap' requires a mesh")
         if config.solver not in ("vmapped", "shardmap"):
             raise ValueError(f"unknown solver {config.solver!r}")
+        if config.overlap < 0:
+            raise ValueError(
+                f"overlap is a halo width and must be >= 0 "
+                f"(got {config.overlap})")
         if config.hysteresis < 1:
             raise ValueError(
                 f"hysteresis must be >= 1 (got {config.hysteresis}); "
@@ -170,10 +182,9 @@ class AssimilationEngine:
 
         self.domain = domain if domain is not None \
             else _domain_from_config(config)
-        if self.domain.ndim != 1 and config.overlap != 0:
-            raise ValueError("overlap > 0 is only supported on 1D domains")
         self.n = self.domain.n
         self.p = self.domain.p
+        self.mesh, self.mesh_axis = self._resolve_mesh(mesh, mesh_axis)
         self.journal = Journal(meta=self.domain.describe())
         self.analysis: Optional[jax.Array] = None
         self._H0 = cls_mod.state_operator(self.n, smooth=config.smooth)
@@ -181,6 +192,44 @@ class AssimilationEngine:
         self._truth = self._rng.normal(size=self.n)
         self._streak = 0  # consecutive over-threshold cycles
         self._t_last = time.perf_counter()
+
+    # -- mesh resolution for the sharded solver ----------------------------
+
+    def _resolve_mesh(self, mesh, mesh_axis):
+        """Validate or build the device mesh for ``solver='shardmap'``.
+
+        The solver needs one device per subdomain, laid out as the
+        domain's processor graph (``domain.mesh_axes()``: a (p,) chain in
+        1D, a (pr, pc) grid in 2D).  A mismatched device count is
+        rejected here, up front, with the fix spelled out — downstream it
+        would only surface as an opaque shard_map shape error.
+        """
+        if self.cfg.solver != "shardmap":
+            return mesh, mesh_axis
+        names, shape = self.domain.mesh_axes()
+        if mesh is None:
+            n_dev = len(jax.devices())
+            if n_dev != self.p:
+                raise ValueError(
+                    f"solver='shardmap' requires a mesh with one device "
+                    f"per subdomain: p={self.p} but {n_dev} JAX device(s) "
+                    f"are visible.  Pass mesh= explicitly, or set "
+                    f"XLA_FLAGS=--xla_force_host_platform_device_count="
+                    f"{self.p} to fan a host platform out, or match the "
+                    f"config's p/pr*pc to the hardware")
+            mesh = compat_mod.make_device_mesh(shape, names)
+            return mesh, (names if len(names) > 1 else names[0])
+        n_mesh = int(np.prod(list(mesh.shape.values())))
+        if n_mesh != self.p:
+            raise ValueError(
+                f"solver='shardmap' requires a mesh with one device per "
+                f"subdomain: p={self.p} but the given mesh has {n_mesh} "
+                f"device(s) (shape {dict(mesh.shape)}).  Rebuild the mesh "
+                f"to match, or change p/pr/pc")
+        if mesh_axis is None:
+            axes = tuple(mesh.shape.keys())
+            mesh_axis = axes if len(axes) > 1 else axes[0]
+        return mesh, mesh_axis
 
     @property
     def boundaries(self):

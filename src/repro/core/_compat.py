@@ -1,0 +1,30 @@
+"""Version compatibility shims for the jax sharding API.
+
+``shard_map`` moved from ``jax.experimental.shard_map`` to ``jax.shard_map``
+(and its replication check was renamed ``check_rep`` -> ``check_vma``);
+``jax.make_mesh`` gained ``axis_types`` along the way.  Resolve whichever
+this runtime ships so the sharded DD-KF path works on both.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, mesh, in_specs, out_specs):
+    """shard_map with the replication/VMA check off (the DD-KF collectives
+    mix psum/psum_scatter/all_gather patterns the checker rejects)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=False)
+
+
+def make_device_mesh(shape, axis_names):
+    """jax.make_mesh across the axis_types API change."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(tuple(shape), tuple(axis_names),
+                             axis_types=(axis_type.Auto,) * len(shape))
+    return jax.make_mesh(tuple(shape), tuple(axis_names))

@@ -16,6 +16,7 @@ the CLS/KF estimate — which is why the paper observes error_DD-DA ~ 1e-11.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Sequence
 
 import numpy as np
@@ -59,23 +60,54 @@ def extend_vec(w: jax.Array, idx: jax.Array, size: int) -> jax.Array:
 class Decomposition:
     """A decomposition of I = {0..n-1} into p (possibly overlapping) blocks.
 
+    ``col_sets`` (and the per-column multiplicity derived from them) are
+    the source of truth: each subdomain's set is its core ∪ halo columns
+    on an *arbitrary* processor graph — 1D interval chains, 2D shelf
+    tilings, or anything else that partitions-with-overlap the index set.
+    Everything downstream (:class:`SchwarzSolver`, ``ddkf.pack_operator``)
+    reads only these general fields.
+
     Attributes:
       n: global number of columns (state size).
-      col_sets: tuple of p int arrays — column indices per subdomain
-        (contiguous, ascending; neighbours may share ``overlap`` columns).
-      boundaries: (p+1,) float array in [0, 1] — geometric interval edges
-        (subdomain i covers [boundaries[i], boundaries[i+1]) ).
-      overlap: number of shared columns s >= 0 between adjacent blocks.
+      col_sets: tuple of p int arrays — column indices per subdomain,
+        ascending; sets may share columns (the Schwarz halo) and may be
+        empty.
+      overlap: halo width s >= 0 the decomposition was built with (eq. 21:
+        how many mesh columns/rows each subdomain absorbs per neighbour).
+      boundaries: optional (p+1,) float array in [0, 1] — geometric
+        interval edges, metadata kept only by the 1D constructor
+        :func:`decompose_1d` (subdomain i covers
+        [boundaries[i], boundaries[i+1])).  ``None`` for graph-general
+        decompositions (2D tilings); nothing in the solver/packing layer
+        dereferences it.
     """
 
     n: int
     col_sets: tuple
-    boundaries: np.ndarray
     overlap: int
+    boundaries: np.ndarray | None = None
 
     @property
     def p(self) -> int:
         return len(self.col_sets)
+
+    @functools.cached_property
+    def column_multiplicity(self) -> np.ndarray:
+        """(n,) count of subdomains owning each column (>= 2 on halos).
+
+        This is the weight of the partition-of-unity assembly (eq. 28):
+        overlap columns are averaged with weight 1/multiplicity.
+        """
+        counts = np.zeros(self.n, dtype=np.int64)
+        for c in self.col_sets:
+            counts[np.asarray(c)] += 1
+        return counts
+
+    @property
+    def has_overlap(self) -> bool:
+        """True iff some column is shared (multiplicity > 1) — what gates
+        the mu-regularization term of eq. 25/26."""
+        return bool(self.column_multiplicity.max(initial=0) > 1)
 
     def overlap_sets(self):
         """I_{i,i+1} — shared indices between consecutive subdomains."""
@@ -176,15 +208,13 @@ class SchwarzSolver:
         self._A = []     # local column blocks of A
         self._L = []     # local Cholesky factors
         self._ov_masks = []
-        counts = np.zeros(self.dec.n, dtype=np.int64)
-        for cols in self.dec.col_sets:
-            counts[np.asarray(cols)] += 1
+        counts = self.dec.column_multiplicity
         self._multiplicity = jnp.asarray(np.maximum(counts, 1))
+        mu_eff = self.mu if self.dec.has_overlap else 0.0
         for i in range(p):
             cols = np.asarray(self.dec.col_sets[i])
             ov = (counts[cols] > 1).astype(np.float64)
-            mu_i = self.mu if self.dec.overlap > 0 else 0.0
-            A_i, L_i = _local_factor(self.prob, cols, mu_i, ov)
+            A_i, L_i = _local_factor(self.prob, cols, mu_eff, ov)
             self._A.append(A_i)
             self._L.append(L_i)
             self._ov_masks.append(jnp.asarray(ov))
@@ -199,7 +229,7 @@ class SchwarzSolver:
         Ax = self._apply_A(x_global)
         resid = self._b - Ax + A_i @ x_global[cols]
         rhs = A_i.T @ (self._r * resid)
-        if self.dec.overlap > 0 and self.mu > 0.0:
+        if self.dec.has_overlap and self.mu > 0.0:
             rhs = rhs + self.mu * self._ov_masks[i] * x_global[cols]
         return _chol_solve(self._L[i], rhs)
 
@@ -221,7 +251,7 @@ class SchwarzSolver:
         for i in range(self.dec.p):
             cols = jnp.asarray(self.dec.col_sets[i])
             xi = self._solve_local(i, x)
-            if self.dec.overlap > 0:
+            if self.dec.has_overlap:
                 # keep a consistent global iterate: average into overlap
                 old = x[cols]
                 ov = self._ov_masks[i].astype(x.dtype)

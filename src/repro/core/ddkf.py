@@ -13,10 +13,12 @@ communication structure the paper counts in its overhead T^p_oh.
 Two execution paths share the same step function:
   * ``solve_vmapped``   — subdomains on the leading axis of a batch
                           (single-device correctness/reference path);
-  * ``solve_shardmap``  — subdomains sharded over a mesh axis with
-                          ``jax.lax.psum`` (the production path; exercised
-                          under forced multi-device XLA in tests and by the
-                          launch dry-run).
+  * ``solve_shardmap``  — one device per subdomain on a 1D chain or a
+                          2D ``pr x pc`` grid mesh (the production path;
+                          ``psum`` for the m-vector, ``psum_scatter`` +
+                          ``all_gather`` for the overlap exchange;
+                          exercised under forced multi-device XLA in
+                          tests and by the launch dry-run).
 
 Static shapes: local blocks are padded to the max block width; padded
 columns carry an identity diagonal in the local normal matrix and zero
@@ -34,6 +36,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import cls as cls_mod
 from repro.core import dd as dd_mod
+from repro.core import _compat
 from repro.kernels import ops as ops_mod
 
 
@@ -68,19 +71,22 @@ def pack(prob: cls_mod.CLSProblem, dec: dd_mod.Decomposition,
     return with_rhs(pack_operator(A, r, dec, mu=mu), b)
 
 
-@partial(jax.jit, static_argnames=("gram_mode",))
+@partial(jax.jit, static_argnames=("gram_mode", "gram_block"))
 def _factor_batched(A_loc: jax.Array, r: jax.Array, diag_add: jax.Array,
-                    gram_mode: str = "auto") -> jax.Array:
+                    gram_mode: str = "auto",
+                    gram_block: int | None = None) -> jax.Array:
     """Batched local normal matrices + Cholesky factors, on device.
 
     N_i = A_i^T diag(r) A_i comes from the ``kernels.ops.gram`` kernel
     (Pallas on TPU, jnp reference elsewhere); ``diag_add`` carries the
     mu-regularization on overlap slots plus the identity on padded slots
-    that keeps every factor nonsingular.
+    that keeps every factor nonsingular.  ``gram_block`` is the autotuned
+    reduction tile, resolved by the caller outside jit
+    (``ops.gram_block_for``).
     """
     p = A_loc.shape[0]
     N = ops_mod.gram(A_loc, jnp.broadcast_to(r, (p, r.shape[0])),
-                     mode=gram_mode)
+                     mode=gram_mode, block_m=gram_block)
     N = N + jax.vmap(jnp.diag)(diag_add.astype(N.dtype))
     return jax.vmap(jnp.linalg.cholesky)(N)
 
@@ -107,11 +113,13 @@ def pack_operator(A: jax.Array, r: jax.Array, dec: dd_mod.Decomposition,
     """
     m, n = A.shape
     p = dec.p
-    w = max(int(np.asarray(c).shape[0]) for c in dec.col_sets)
+    w = max(1, max(int(np.asarray(c).shape[0]) for c in dec.col_sets))
 
-    counts = np.zeros(n, dtype=np.int64)
-    for c in dec.col_sets:
-        counts[np.asarray(c)] += 1
+    # Per-column multiplicity is the decomposition's source of truth: the
+    # halo columns (multiplicity > 1) carry the mu-regularization and the
+    # 1/multiplicity partition-of-unity assembly weight, on any graph.
+    counts = dec.column_multiplicity
+    halo_mu = dec.has_overlap and mu > 0.0
 
     A_loc = np.zeros((p, m, w), dtype=np.asarray(A).dtype)
     cols = -np.ones((p, w), dtype=np.int64)
@@ -124,13 +132,17 @@ def pack_operator(A: jax.Array, r: jax.Array, dec: dd_mod.Decomposition,
         A_loc[i, :, :k] = A_np[:, c]
         cols[i, :k] = c
         mask[i, :k] = 1.0
-        if dec.overlap > 0 and mu > 0.0:
+        if halo_mu:
             muov[i, :k] = mu * (counts[c] > 1).astype(muov.dtype)
     A_loc = jnp.asarray(A_loc)
     r = jnp.asarray(r, A_loc.dtype)
-    # mu on overlap slots; identity on padded slots (mask == 0).
+    # mu on overlap slots; identity on padded slots (mask == 0).  The
+    # gram reduction tile is autotuned host-side (first call per shape,
+    # cached) and handed to the jitted factor build as a static arg.
+    gram_block = ops_mod.gram_block_for((p, m, w), A_loc.dtype,
+                                        mode=gram_mode)
     L_loc = _factor_batched(A_loc, r, jnp.asarray(muov + (1.0 - mask)),
-                            gram_mode=gram_mode)
+                            gram_mode=gram_mode, gram_block=gram_block)
     mult_at = np.maximum(counts, 1)[np.clip(cols, 0, n - 1)]
     wdiv = mask / mult_at
     return PackedDD(A_loc=A_loc, L_loc=L_loc,
@@ -207,46 +219,75 @@ def gather_local(packed: PackedDD, x_glob: jax.Array) -> jax.Array:
 # Production path: subdomains sharded over a mesh axis.
 # ---------------------------------------------------------------------------
 
-def solve_shardmap(packed: PackedDD, mesh, axis: str = "sub",
+def solve_shardmap(packed: PackedDD, mesh, axis="sub",
                    iters: int = 60, damping: float = 1.0) -> jax.Array:
-    """Same iteration with one device per subdomain.
+    """Same iteration with one device per subdomain, on a 1D or 2D mesh.
+
+    ``axis`` is one mesh axis name or a tuple of names — pass
+    ``("row", "col")`` to run subdomain ``r * pc + c`` on device (r, c)
+    of a ``pr x pc`` mesh (the paper's processor topology: grid axes map
+    onto the mesh axes, so neighbour-halo traffic stays on-axis).
 
     Per iteration the communication is one ``psum`` of the (m,) product —
-    the m-vector all-reduce the paper accounts as overhead — plus one
-    ``psum`` of the (n,) assembled estimate (the boundary exchange; for a
-    banded A this would specialize to neighbour ppermute, we keep the
-    general form).
+    the m-vector all-reduce the paper accounts as overhead — plus the
+    overlap-averaging exchange of the (n,) assembled estimate, done as a
+    ``psum_scatter`` + ``all_gather`` pair along the innermost mesh axis
+    (reduce-scatter is the bandwidth-optimal form of that all-reduce on a
+    real torus; for a banded A it would further specialize to neighbour
+    ppermute, we keep the general graph form).  Only the n-vector moves —
+    the (w,) local iterates never leave their device.
     """
+    axes = (axis,) if isinstance(axis, str) else tuple(axis)
+    sizes = [mesh.shape[a] for a in axes]
+    if int(np.prod(sizes)) != packed.p:
+        raise ValueError(
+            f"mesh axes {axes} have {int(np.prod(sizes))} devices but the "
+            f"packing has p={packed.p} subdomains")
+    # Innermost axis carries the scatter; pad the accumulator so its
+    # length splits evenly (the last slot doubles as the -1-column dump).
+    ks = int(mesh.shape[axes[-1]])
+    n_pad = -(-(packed.n + 1) // ks) * ks
+
+    def nvec_allreduce(part):
+        """Sum an (n_pad,) partial over every mesh axis: plain psum on the
+        outer axes, reduce-scatter + all-gather on the innermost."""
+        if len(axes) > 1:
+            part = jax.lax.psum(part, axes[:-1])
+        chunk = jax.lax.psum_scatter(part, axes[-1], scatter_dimension=0,
+                                     tiled=True)
+        return jax.lax.all_gather(chunk, axes[-1], tiled=True)
 
     def per_device(A_i, L_i, mask_i, muov_i, wdiv_i, cols_i):
         # Leading axis of size 1 (= this device's subdomain).
         A_i, L_i, mask_i, muov_i, wdiv_i, cols_i = (
             A_i[0], L_i[0], mask_i[0], muov_i[0], wdiv_i[0], cols_i[0])
+        safe = jnp.where(cols_i >= 0, cols_i, n_pad - 1)
+
+        def scatter_part(x_i):
+            return jnp.zeros((n_pad,), x_i.dtype).at[safe].add(
+                x_i * mask_i)
 
         def body(_, x_i):
-            Ax = jax.lax.psum(A_i @ (x_i * wdiv_i), axis)
+            Ax = jax.lax.psum(A_i @ (x_i * wdiv_i), axes)
             new = _local_update(A_i, L_i, mask_i, muov_i, x_i, Ax,
                                 packed.r, packed.b)
             x_i2 = (1.0 - damping) * x_i + damping * new
-            # Global overlap averaging (psum-scatter of the n-vector).
-            safe = jnp.where(cols_i >= 0, cols_i, packed.n)
-            part = jnp.zeros((packed.n + 1,), x_i2.dtype
-                             ).at[safe].add(x_i2 * mask_i)
-            x_glob = jax.lax.psum(part[:packed.n], axis) / packed.mult
+            # Overlap consistency (eq. 28): multiplicity-weighted average
+            # of the duplicated columns, then gather back.
+            x_glob = nvec_allreduce(scatter_part(x_i2))[:packed.n] \
+                / packed.mult
             return x_glob[jnp.where(cols_i >= 0, cols_i, 0)] * mask_i
 
         x_i = jnp.zeros((packed.w,), dtype=A_i.dtype)
         x_i = jax.lax.fori_loop(0, iters, body, x_i)
-        safe = jnp.where(cols_i >= 0, cols_i, packed.n)
-        part = jnp.zeros((packed.n + 1,), x_i.dtype).at[safe].add(
-            x_i * mask_i)
-        return jax.lax.psum(part[:packed.n], axis)[None] / packed.mult
+        return (nvec_allreduce(scatter_part(x_i))[:packed.n]
+                / packed.mult)[None]
 
-    fn = jax.shard_map(
+    specs = P(axes if len(axes) > 1 else axes[0])
+    fn = _compat.shard_map(
         per_device, mesh=mesh,
-        in_specs=(P(axis), P(axis), P(axis), P(axis), P(axis), P(axis)),
-        out_specs=P(axis),
-        check_vma=False)
+        in_specs=(specs,) * 6,
+        out_specs=specs)
     out = fn(packed.A_loc, packed.L_loc, packed.mask, packed.muov,
              packed.wdiv, packed.cols)
     return out[0]

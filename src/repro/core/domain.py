@@ -86,6 +86,13 @@ class Domain(Protocol):
         """Processor graph edges the diffusion schedule runs on."""
         ...
 
+    def mesh_axes(self) -> tuple:
+        """(names, shape) of the device mesh the processor graph maps
+        onto: (("sub",), (p,)) for a chain, (("row", "col"), (pr, pc))
+        for a grid — subdomain i lives on mesh coordinate
+        ``np.unravel_index(i, shape)``."""
+        ...
+
     def obs_positions(self, obs: np.ndarray) -> np.ndarray:
         """(m,) raster-ordered positions in [0, 1) for the observation
         operator (identity in 1D; row-continuous raster coordinate in 2D)."""
@@ -150,6 +157,9 @@ class Interval1D:
     def graph_edges(self) -> list:
         return dydd_mod.chain_edges(self._p)
 
+    def mesh_axes(self) -> tuple:
+        return ("sub",), (self._p,)
+
     def obs_positions(self, obs: np.ndarray) -> np.ndarray:
         return np.asarray(obs, np.float64)
 
@@ -175,8 +185,11 @@ class ShelfTiling2D:
     State columns are raster-ordered: global column ``iy * nx + ix`` is the
     mesh point at ``((ix + 0.5) / nx, (iy + 0.5) / ny)``.  Subdomain
     ``r * pc + c`` is cell (r, c) of the shelf tiling; the processor graph
-    is the pr x pc grid.  Overlap between cells is not supported (the
-    Schwarz overlap machinery is 1D-interval-specific); pass ``overlap=0``.
+    is the pr x pc grid.  ``decomposition(overlap=s)`` gives each cell a
+    cross-shaped halo of ``s`` mesh columns/rows absorbed from its
+    grid-graph neighbours (``dydd2d.cell_col_sets``), with the
+    multiplicity-weighted Schwarz assembly falling out of the general
+    :class:`~repro.core.dd.Decomposition` fields.
     """
 
     ndim = 2
@@ -221,18 +234,20 @@ class ShelfTiling2D:
         return RebalanceInfo(migrated=res.total_movement, rounds=res.rounds)
 
     def decomposition(self, overlap: int = 0) -> dd_mod.Decomposition:
-        if overlap != 0:
-            raise ValueError("ShelfTiling2D does not support overlap > 0")
+        if overlap < 0:
+            raise ValueError(f"overlap must be >= 0 (got {overlap})")
         col_sets = dydd2d_mod.cell_col_sets(self.nx, self.ny, self.y_edges,
-                                            self.x_edges)
-        # Decomposition.boundaries is 1D-interval metadata; for a tiling we
-        # store a uniform placeholder (nothing downstream of pack reads it).
-        return dd_mod.Decomposition(
-            n=self.n, col_sets=tuple(col_sets),
-            boundaries=np.linspace(0.0, 1.0, self.p + 1), overlap=0)
+                                            self.x_edges, overlap=overlap)
+        # boundaries is 1D-interval metadata; a tiling has none (and the
+        # solver/packing layer reads only col_sets + multiplicity).
+        return dd_mod.Decomposition(n=self.n, col_sets=tuple(col_sets),
+                                    overlap=overlap, boundaries=None)
 
     def graph_edges(self) -> list:
         return dydd_mod.grid_edges(self.pr, self.pc, torus=False)
+
+    def mesh_axes(self) -> tuple:
+        return ("row", "col"), (self.pr, self.pc)
 
     def obs_positions(self, obs: np.ndarray) -> np.ndarray:
         """Row-continuous raster coordinate: the observation keeps its

@@ -150,24 +150,66 @@ def make_observations_2d(m: int, kind: str = "clustered",
     return np.clip(pts, 0, 0.999999)
 
 
+def _owner_ranges(owner: np.ndarray, k: int):
+    """Contiguous index range [lo, hi) owned by each of k owners (owner is
+    monotone, from searchsorted on monotone edges)."""
+    out = []
+    for i in range(k):
+        idx = np.where(owner == i)[0]
+        if idx.size:
+            out.append((int(idx[0]), int(idx[-1]) + 1))
+        else:
+            out.append((0, 0))
+    return out
+
+
 def cell_col_sets(nx: int, ny: int, y_edges: np.ndarray,
-                  x_edges: np.ndarray):
+                  x_edges: np.ndarray, overlap: int = 0):
     """Map a raster-ordered nx x ny mesh onto the tiling: the 2D analogue
     of ``dd.decompose_1d`` (Remark 4's I x J decomposition).  Returns a
-    list of pr*pc int arrays of global column indices."""
+    list of pr*pc int arrays of global column indices (cell (r, c) is
+    entry ``r * pc + c``).
+
+    With ``overlap = s > 0`` each cell's set is core ∪ halo (eq. 21-22
+    applied per axis of the grid graph): the cell absorbs ``s`` mesh
+    columns from its left/right neighbour cells *within its own strip
+    rows*, and ``s`` mesh rows from the strips above/below *within its
+    own x-window* — a cross-shaped (grid-graph-neighbour) halo, clipped
+    at the shelf seams and the domain boundary.  Diagonal (non-neighbour)
+    corners are not absorbed; assembly weights follow from the resulting
+    column multiplicity, nothing here needs to be conforming across
+    strips.  A cell with an empty core stays empty.
+    """
+    assert overlap >= 0
     xs = (np.arange(nx) + 0.5) / nx
     ys = (np.arange(ny) + 0.5) / ny
     pr = len(y_edges) - 1
     pc = x_edges.shape[1] - 1
+    row_owner = np.clip(np.searchsorted(y_edges, ys, side="right") - 1,
+                        0, pr - 1)
+    row_rng = _owner_ranges(row_owner, pr)
     out = []
-    gx, gy = np.meshgrid(xs, ys)              # (ny, nx)
-    flat_x, flat_y = gx.reshape(-1), gy.reshape(-1)
-    rows = np.clip(np.searchsorted(y_edges, flat_y, side="right") - 1, 0,
-                   pr - 1)
     for r in range(pr):
-        cols = np.clip(np.searchsorted(x_edges[r], flat_x,
-                                       side="right") - 1, 0, pc - 1)
-        for cidx in range(pc):
-            sel = np.where((rows == r) & (cols == cidx))[0]
-            out.append(sel.astype(np.int64))
+        ry0, ry1 = row_rng[r]
+        col_owner = np.clip(np.searchsorted(x_edges[r], xs,
+                                            side="right") - 1, 0, pc - 1)
+        col_rng = _owner_ranges(col_owner, pc)
+        for c in range(pc):
+            rx0, rx1 = col_rng[c]
+            if ry1 <= ry0 or rx1 <= rx0:      # empty core: no halo either
+                out.append(np.empty((0,), dtype=np.int64))
+                continue
+            mask = np.zeros((ny, nx), dtype=bool)
+            # core + left/right halo along this strip's own rows
+            lx0 = max(0, rx0 - (overlap if c > 0 else 0))
+            lx1 = min(nx, rx1 + (overlap if c < pc - 1 else 0))
+            mask[ry0:ry1, lx0:lx1] = True
+            # up/down halo rows from the neighbour strips, kept inside the
+            # cell's own x-window (clipped at the shelf seam)
+            if overlap > 0:
+                if r > 0:
+                    mask[max(0, ry0 - overlap):ry0, rx0:rx1] = True
+                if r < pr - 1:
+                    mask[ry1:min(ny, ry1 + overlap), rx0:rx1] = True
+            out.append(np.where(mask.reshape(-1))[0].astype(np.int64))
     return out

@@ -12,6 +12,8 @@ selected by ``mode``:
 """
 from __future__ import annotations
 
+import time
+
 import jax
 import jax.numpy as jnp
 
@@ -63,17 +65,96 @@ def ssd_scan(x, dt, A, B, C, *, chunk: int = 256, mode: str = "auto"):
                          interpret=(m == "interpret"))
 
 
-def gram(A, r, *, mode: str = "auto", block_m: int = 256):
+# -- gram block_m autotuning -------------------------------------------------
+#
+# The best reduction tile depends on (p, m, w) — a tall skinny A wants a
+# bigger m-tile to amortize the accumulator writeback, a wide one is
+# VMEM-bound earlier.  First call per (shape, dtype, path) runs a tiny
+# timed sweep; every later call (and every jit retrace with the same
+# shape) hits the cache.
+
+GRAM_BLOCK_CANDIDATES = (128, 256, 512)
+_GRAM_TUNE_CACHE: dict = {}
+
+
+def autotune_gram_block(p: int, m: int, w: int, dtype,
+                        interpret: bool = False) -> int:
+    """Pick block_m for a (p, m, w) gram by timing the candidates once.
+
+    Cached per (shape, dtype, path); the sweep costs two kernel launches
+    per candidate (one compile+warmup, one timed).
+    """
+    # Time exactly the shape the production path runs: the native kernel
+    # sees the lane (w) axis zero-padded to the 128-lane tile (ops.gram
+    # pads before calling it); interpret mode runs the raw width.
+    if not interpret:
+        w = w + (-w % 128)
+    key = (int(p), int(m), int(w), jnp.dtype(dtype).name, bool(interpret))
+    hit = _GRAM_TUNE_CACHE.get(key)
+    if hit is not None:
+        return hit["block_m"]
+    A = jnp.ones((p, m, w), dtype)
+    r = jnp.ones((p, m), dtype)
+    sweep = {}
+    for bm in sorted({min(c, m) for c in GRAM_BLOCK_CANDIDATES}):
+        jax.block_until_ready(
+            _gram.gram(A, r, block_m=bm, interpret=interpret))
+        t0 = time.perf_counter()
+        jax.block_until_ready(
+            _gram.gram(A, r, block_m=bm, interpret=interpret))
+        sweep[bm] = time.perf_counter() - t0
+    best = min(sweep, key=sweep.get)
+    _GRAM_TUNE_CACHE[key] = {"block_m": best, "time_s": sweep[best],
+                             "sweep_s": sweep}
+    return best
+
+
+def gram_block_for(shape, dtype, mode: str = "auto"):
+    """The block_m the gram path will use for this (p, m, w) shape —
+    autotuned for the kernel paths, ``None`` when the shape resolves to
+    the jnp reference (which has no blocking).  Call this *outside* jit
+    (e.g. at operator-packing time) and pass the result through as a
+    static argument."""
+    m = _resolve(mode)
+    if m == "ref" or (mode == "auto" and jnp.dtype(dtype) == jnp.float64):
+        return None
+    p, mm, w = shape
+    return autotune_gram_block(p, mm, w, dtype, interpret=(m == "interpret"))
+
+
+def gram_tuning_report() -> dict:
+    """JSON-serializable snapshot of the autotune cache: per shape, the
+    chosen block and the timed sweep (what the streaming benchmark
+    records next to its pack times)."""
+    return {
+        f"p{p}_m{m}_w{w}_{dt}" + ("_interpret" if it else ""): dict(v)
+        for (p, m, w, dt, it), v in _GRAM_TUNE_CACHE.items()
+    }
+
+
+def gram(A, r, *, mode: str = "auto", block_m: int | None = None):
     """Batched weighted Gram N = A^T diag(r) A — the DD-KF normal-matrix
     assembly hot spot (paper eq. 27).  A: (p, m, w), r: (p, m).
 
     float64 inputs always take the jnp reference under mode="auto" (the
     MXU has no f64 path); for the native kernel the lane (w) axis is
     zero-padded to the 128-lane tile and the result sliced back.
+
+    ``block_m=None`` autotunes the reduction tile on first call per shape
+    (cached; see :func:`autotune_gram_block`) when the inputs are
+    concrete, and falls back to 256 under tracing — jitted callers should
+    resolve the block with :func:`gram_block_for` and pass it statically.
     """
     m = _resolve(mode)
     if m == "ref" or (mode == "auto" and A.dtype == jnp.float64):
         return _ref.gram_ref(A, r)
+    if block_m is None:
+        if isinstance(A, jax.core.Tracer):
+            block_m = 256
+        else:
+            p, mm, w_ = A.shape
+            block_m = autotune_gram_block(p, mm, w_, A.dtype,
+                                          interpret=(m == "interpret"))
     w = A.shape[-1]
     wpad = -w % 128
     if m == "kernel" and wpad:

@@ -223,9 +223,30 @@ def test_engine_rejects_dimension_mismatch():
             "rotating_swarm", m=40, cycles=2)
 
 
-def test_2d_overlap_unsupported():
+def test_2d_overlap_converges_to_same_fixed_point():
+    """Schwarz halo on the shelf tiling: overlap > 0 reaches the same
+    fixed point (the one-shot CLS estimate, so also the overlap=0
+    block-exact solve) on a seeded 2D scenario, and the halo-augmented
+    decomposition genuinely overlaps."""
+    eng = AssimilationEngine(small_config_2d(overlap=2))
+    dec = eng.domain.decomposition(overlap=2)
+    assert dec.boundaries is None
+    assert dec.has_overlap and dec.column_multiplicity.max() > 1
+    journal = eng.run_scenario("rotating_swarm", m=160, cycles=3, seed=0)
+    for r in journal.records:
+        assert r.error_vs_direct < 1e-8, (r.cycle, r.error_vs_direct)
+
+    eng0 = AssimilationEngine(small_config_2d(overlap=0))
+    eng0.run_scenario("rotating_swarm", m=160, cycles=3, seed=0)
+    assert float(np.linalg.norm(np.asarray(eng.analysis)
+                                - np.asarray(eng0.analysis))) < 1e-8
+
+
+def test_negative_overlap_rejected():
     with pytest.raises(ValueError, match="overlap"):
-        AssimilationEngine(small_config_2d(overlap=1))
+        AssimilationEngine(small_config_2d(overlap=-1))
+    with pytest.raises(ValueError, match="overlap"):
+        AssimilationEngine(small_config(overlap=-2))
 
 
 def test_grid_dropout_fires_empty_cell_dd_step():
@@ -242,13 +263,16 @@ def test_grid_dropout_fires_empty_cell_dd_step():
         assert all(v > 0 for v in r.loads), (r.cycle, r.loads)
 
 
-def test_shelf_pr1_degenerates_to_interval1d_bitwise():
+@pytest.mark.parametrize("overlap", [0, 2])
+def test_shelf_pr1_degenerates_to_interval1d_bitwise(overlap):
     """A ShelfTiling2D with pr=1, ny=1 is exactly the 1D engine: same
-    analyses and same journal loads, bit for bit."""
+    analyses and same journal loads, bit for bit — including the halo
+    path (overlap=s reduces to the 1D interval overlap of eq. 21)."""
     n, p, m, cycles = 48, 4, 120, 5
     one_d = list(streams.make_stream("drifting_swarm", m, cycles, seed=5))
 
-    eng1 = AssimilationEngine(EngineConfig(n=n, p=p, iters=120))
+    eng1 = AssimilationEngine(EngineConfig(n=n, p=p, iters=120,
+                                           overlap=overlap))
     j1 = eng1.run(iter(one_d))
 
     def lifted():
@@ -256,7 +280,7 @@ def test_shelf_pr1_degenerates_to_interval1d_bitwise():
             yield np.stack([obs, np.full_like(obs, 0.5)], axis=1)
 
     eng2 = AssimilationEngine(EngineConfig(ndim=2, nx=n, ny=1, pr=1, pc=p,
-                                           iters=120))
+                                           iters=120, overlap=overlap))
     j2 = eng2.run(lifted())
 
     np.testing.assert_array_equal(np.asarray(eng1.analysis),
@@ -311,8 +335,31 @@ def test_empty_journal_summary():
 # ---------------------------------------------------------------------------
 
 def test_shardmap_without_mesh_raises():
+    # On this single-device test session the device count cannot match
+    # p=4, so auto-building the mesh is rejected with the fix spelled out.
     with pytest.raises(ValueError, match="requires a mesh"):
         AssimilationEngine(EngineConfig(solver="shardmap"))
+
+
+def test_shardmap_mesh_device_count_mismatch_raises():
+    """p != mesh device count must fail up front with an actionable
+    message, not as an opaque shard_map shape error mid-solve."""
+    from repro.core import _compat
+    mesh = _compat.make_device_mesh((1,), ("sub",))
+    with pytest.raises(ValueError, match="one device per subdomain"):
+        AssimilationEngine(EngineConfig(solver="shardmap", p=4), mesh=mesh)
+
+
+def test_shardmap_single_device_mesh_runs():
+    """p=1 matches the 1-device test session: the engine auto-builds the
+    (1,) mesh and the sharded path solves a cycle end to end."""
+    cfg = EngineConfig(n=32, p=1, iters=60, solver="shardmap",
+                       track_reference=True)
+    eng = AssimilationEngine(cfg)
+    assert eng.mesh is not None and eng.mesh_axis == "sub"
+    journal = eng.run_scenario("drifting_swarm", m=60, cycles=2, seed=0)
+    for r in journal.records:
+        assert r.error_vs_direct < 1e-8
 
 
 def test_unknown_solver_raises():

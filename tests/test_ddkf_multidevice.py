@@ -18,7 +18,7 @@ SCRIPT = r"""
 import jax
 jax.config.update("jax_enable_x64", True)
 import numpy as np, jax.numpy as jnp
-from repro.core import cls, dd, ddkf, dydd
+from repro.core import cls, dd, ddkf, dydd, _compat
 
 rng = np.random.default_rng(0)
 obs = rng.beta(2, 5, size=400)
@@ -27,24 +27,90 @@ x_direct = cls.solve(prob)
 res = dydd.dydd_1d(obs, 8)
 dec = dd.decompose_1d(prob.n, res.boundaries, overlap=0)
 packed = ddkf.pack(prob, dec)
-mesh = jax.make_mesh((8,), ("sub",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+mesh = _compat.make_device_mesh((8,), ("sub",))
 x_s = ddkf.solve_shardmap(packed, mesh, axis="sub", iters=120)
 err = float(jnp.linalg.norm(x_s - x_direct))
 assert err < 1e-9, err
 print("OK", err)
 """
 
+SCRIPT_2D = r"""
+import jax
+jax.config.update("jax_enable_x64", True)
+import numpy as np, jax.numpy as jnp
+from repro.core import cls, dd, ddkf, dydd2d, domain, _compat
 
-@pytest.mark.slow
-def test_shardmap_ddkf_8_devices():
+ny, nx = 8, 16
+n = nx * ny
+dom = domain.ShelfTiling2D(nx=nx, ny=ny, pr=2, pc=4)
+obs2 = dydd2d.make_observations_2d(400, kind="clustered", seed=4)
+dom.rebalance(obs2)
+dec = dom.decomposition(overlap=1)
+obs_raster = (np.clip((obs2[:, 1] * ny).astype(int), 0, ny - 1) * nx
+              + np.clip((obs2[:, 0] * nx).astype(int), 0, nx - 1)
+              + 0.5) / n
+prob = cls.local_problem(jax.random.PRNGKey(0), n, np.sort(obs_raster))
+packed = ddkf.pack(prob, dec)
+x_v = ddkf.solve_vmapped(packed, iters=200, damping=0.7)
+mesh = _compat.make_device_mesh((2, 4), ("row", "col"))
+x_s = ddkf.solve_shardmap(packed, mesh, axis=("row", "col"), iters=200,
+                          damping=0.7)
+# The grid-sharded solve runs the identical iteration; the collective
+# reduction order differs from the batched einsum by a few ULPs, nothing
+# more (bitwise-equal up to reduction associativity).
+d = float(np.abs(np.asarray(x_v) - np.asarray(x_s)).max())
+assert d < 1e-13, d
+err = float(jnp.linalg.norm(x_s - cls.solve(prob)))
+assert err < 1e-9, err
+print("OK", d, err)
+"""
+
+SCRIPT_ENGINE = r"""
+import jax
+jax.config.update("jax_enable_x64", True)
+import numpy as np
+from repro.assim import AssimilationEngine, EngineConfig
+
+kw = dict(ndim=2, nx=16, ny=8, pr=2, pc=4, iters=200, damping=0.7,
+          overlap=1, imbalance_threshold=1.5)
+js = AssimilationEngine(EngineConfig(solver="shardmap", **kw)).run_scenario(
+    "rotating_swarm", m=160, cycles=2, seed=0)
+jv = AssimilationEngine(EngineConfig(solver="vmapped", **kw)).run_scenario(
+    "rotating_swarm", m=160, cycles=2, seed=0)
+for a, b in zip(js.records, jv.records):
+    assert a.loads == b.loads and a.repartitioned == b.repartitioned
+print("OK")
+"""
+
+
+def _run_forced_8dev(script: str):
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
-    out = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+    out = subprocess.run([sys.executable, "-c", script], env=env,
                          capture_output=True, text=True, timeout=600)
     assert out.returncode == 0, out.stderr[-2000:]
     assert "OK" in out.stdout
+
+
+@pytest.mark.slow
+def test_shardmap_ddkf_8_devices():
+    _run_forced_8dev(SCRIPT)
+
+
+@pytest.mark.slow
+def test_shardmap_ddkf_2d_mesh_matches_vmapped():
+    """2D shelf tiling with halo overlap on a real 2 x 4 device mesh:
+    grid axes map onto mesh axes; result matches solve_vmapped to
+    reduction-order ULPs and the direct CLS solve to 1e-9."""
+    _run_forced_8dev(SCRIPT_2D)
+
+
+@pytest.mark.slow
+def test_engine_shardmap_journal_matches_vmapped():
+    """AssimilationEngine with solver='shardmap' auto-builds the pr x pc
+    mesh and journals the same loads/repartitions as the vmapped run."""
+    _run_forced_8dev(SCRIPT_ENGINE)
 
 
 # ---------------------------------------------------------------------------

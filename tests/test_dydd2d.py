@@ -68,6 +68,87 @@ def test_cell_col_sets_partition_mesh():
     np.testing.assert_array_equal(np.sort(allc), np.arange(120))
 
 
+# ---------------------------------------------------------------------------
+# Halo (Schwarz overlap) column sets on the shelf tiling.
+# ---------------------------------------------------------------------------
+
+def test_cell_col_sets_halo_covers_and_overlaps():
+    """overlap=s supersets the core partition; every column is still
+    covered; interior seams carry multiplicity > 1."""
+    obs = dydd2d.make_observations_2d(500, seed=1)
+    res = dydd2d.dydd_2d(obs, pr=2, pc=3)
+    core = dydd2d.cell_col_sets(12, 10, res.y_edges, res.x_edges)
+    halo = dydd2d.cell_col_sets(12, 10, res.y_edges, res.x_edges,
+                                overlap=2)
+    counts = np.zeros(120, np.int64)
+    for cset, hset in zip(core, halo):
+        assert set(np.asarray(cset)) <= set(np.asarray(hset))
+        assert (np.diff(hset) > 0).all()      # ascending, unique
+        counts[hset] += 1
+    assert counts.min() >= 1                   # full coverage
+    assert counts.max() > 1                    # halos actually overlap
+
+
+def test_cell_col_sets_halo_is_cross_shaped():
+    """On a uniform 2x2 tiling of an 8x8 mesh with overlap=1, cell (0,0)
+    absorbs one column from its right neighbour and one row from the
+    strip below — but not the diagonal corner point (4,4)."""
+    y = np.linspace(0, 1, 3)
+    x = np.tile(np.linspace(0, 1, 3), (2, 1))
+    halo = dydd2d.cell_col_sets(8, 8, y, x, overlap=1)
+    cell00 = set(np.asarray(halo[0]).tolist())
+    assert 0 * 8 + 4 in cell00        # right halo column, own rows
+    assert 4 * 8 + 0 in cell00        # bottom halo row, own columns
+    assert 4 * 8 + 4 not in cell00    # diagonal corner: not a neighbour
+    # boundary clipping: nothing outside the mesh, nothing left of x=0
+    assert min(cell00) == 0 and max(cell00) < 64
+
+
+def test_cell_col_sets_empty_core_gets_no_halo():
+    """A cell whose x-window holds no mesh column stays empty even with
+    overlap > 0 (a halo without a core would break load accounting)."""
+    y = np.linspace(0, 1, 2)
+    x = np.array([[0.0, 0.001, 1.0]])     # cell (0,0) owns no column
+    halo = dydd2d.cell_col_sets(8, 4, y, x, overlap=2)
+    assert halo[0].size == 0
+    assert halo[1].size == 32
+
+
+def test_cell_col_sets_ny1_pr1_matches_decompose_1d():
+    """Degenerate mesh: the halo construction reproduces the 1D interval
+    overlap (eq. 21) exactly."""
+    for s in (0, 1, 3):
+        halo = dydd2d.cell_col_sets(
+            48, 1, np.linspace(0, 1, 2),
+            np.tile(np.linspace(0, 1, 5), (1, 1)), overlap=s)
+        dec = dd.decompose_1d(48, dd.uniform_boundaries(4), overlap=s)
+        for a, b in zip(halo, dec.col_sets):
+            np.testing.assert_array_equal(a, b)
+
+
+@pytest.mark.parametrize("overlap", [1, 2])
+def test_ddkf_2d_overlap_converges_to_direct(overlap):
+    """Multiplicity-weighted halo assembly: the overlapping 2D Schwarz
+    solve reaches the same fixed point (the direct CLS estimate) as the
+    overlap=0 block-exact decomposition."""
+    nx, ny = 12, 8
+    n = nx * ny
+    obs2 = dydd2d.make_observations_2d(400, kind="clustered", seed=4)
+    obs_raster = (np.clip((obs2[:, 1] * ny).astype(int), 0, ny - 1) * nx
+                  + np.clip((obs2[:, 0] * nx).astype(int), 0, nx - 1)
+                  + 0.5) / n
+    prob = cls.local_problem(jax.random.PRNGKey(0), n, np.sort(obs_raster))
+    res = dydd2d.dydd_2d(obs2, pr=2, pc=2)
+    col_sets = dydd2d.cell_col_sets(nx, ny, res.y_edges, res.x_edges,
+                                    overlap=overlap)
+    dec = dd.Decomposition(n=n, col_sets=tuple(col_sets), overlap=overlap)
+    assert dec.boundaries is None and dec.has_overlap
+    packed = ddkf.pack(prob, dec)
+    x = ddkf.solve_vmapped(packed, iters=300, damping=0.7)
+    err = float(jnp.linalg.norm(x - cls.solve(prob)))
+    assert err < 1e-6, err
+
+
 def test_ddkf_on_2d_decomposition():
     """End-to-end: 2D DyDD tiling -> DD-KF solve == direct CLS (the 2D
     analogue of the paper's pipeline; Remark 4's I x J decomposition)."""
@@ -161,6 +242,24 @@ def test_gram_kernel_sweep(p, m, w, dtype):
                                np.asarray(want), atol=tol * float(
                                    jnp.max(jnp.abs(want))) / 100 + tol,
                                rtol=tol)
+
+
+def test_gram_autotune_picks_and_caches_block():
+    """First call per shape sweeps the block_m candidates and caches the
+    winner; the tuning report exposes the chosen block + timed sweep."""
+    shape = (2, 320, 16)
+    b1 = ops.autotune_gram_block(*shape, jnp.float32, interpret=True)
+    assert b1 in {min(c, shape[1]) for c in ops.GRAM_BLOCK_CANDIDATES}
+    b2 = ops.autotune_gram_block(*shape, jnp.float32, interpret=True)
+    assert b2 == b1
+    report = ops.gram_tuning_report()
+    key = "p2_m320_w16_float32_interpret"
+    assert key in report
+    assert report[key]["block_m"] == b1
+    assert set(report[key]["sweep_s"]) == {min(c, shape[1])
+                                           for c in ops.GRAM_BLOCK_CANDIDATES}
+    # the ref path has no blocking to tune
+    assert ops.gram_block_for(shape, jnp.float64, mode="auto") is None
 
 
 def test_gram_matches_ddkf_pack_normal_matrix():

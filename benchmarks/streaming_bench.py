@@ -8,6 +8,12 @@ threshold/hysteresis policy) — and emit a JSON comparison of per-cycle
 latency (split into host+device *pack* vs device *solve*, so the batched
 ``kernels.ops.gram`` packing win is visible) and the imbalance trajectory.
 
+The report also carries the communication accounting: per-arm modelled
+``comm_bytes_per_cycle`` + ``halo_fraction``, a ``comm_sweep`` section
+pricing the allreduce vs neighbour (halo-only ppermute) state exchange
+across overlap widths s = 0..3, and — with ``--compare-comm`` on a
+sharded run — measured wall-clock for both paths side by side.
+
   PYTHONPATH=src python benchmarks/streaming_bench.py --out streaming.json
   PYTHONPATH=src python benchmarks/streaming_bench.py \
       --n 96 --m 200 --cycles 4 --scenarios drifting_swarm    # smoke
@@ -27,14 +33,17 @@ jax.config.update("jax_enable_x64", True)
 import numpy as np  # noqa: E402
 
 from repro.assim import AssimilationEngine, EngineConfig, streams  # noqa: E402
+from repro.core import ddkf, domain  # noqa: E402
 from repro.kernels import ops  # noqa: E402
 
 
-def make_config(ndim: int, rebalance: bool, args) -> EngineConfig:
+def make_config(ndim: int, rebalance: bool, args,
+                comm: str | None = None) -> EngineConfig:
     common = dict(iters=args.iters, rebalance=rebalance,
                   imbalance_threshold=args.threshold,
                   track_reference=args.track_reference,
-                  solver=args.solver, overlap=args.overlap)
+                  solver=args.solver, overlap=args.overlap,
+                  comm=comm or args.comm, halo_weight=args.halo_weight)
     if ndim == 1:
         return EngineConfig(n=args.n, p=args.p, **common)
     return EngineConfig(ndim=2, nx=args.nx, ny=args.ny,
@@ -42,9 +51,10 @@ def make_config(ndim: int, rebalance: bool, args) -> EngineConfig:
                         **common)
 
 
-def run_arm(name: str, rebalance: bool, args) -> dict:
+def run_arm(name: str, rebalance: bool, args,
+            comm: str | None = None) -> dict:
     ndim = streams.get(name).ndim
-    eng = AssimilationEngine(make_config(ndim, rebalance, args))
+    eng = AssimilationEngine(make_config(ndim, rebalance, args, comm=comm))
     journal = eng.run_scenario(name, m=args.m, cycles=args.cycles,
                                seed=args.seed)
     cycle_times = journal.cycle_times
@@ -55,7 +65,17 @@ def run_arm(name: str, rebalance: bool, args) -> dict:
         "rebalance": rebalance,
         "solver": args.solver,
         "overlap": args.overlap,
+        "comm": comm or args.comm,
+        "halo_weight": args.halo_weight,
         "domain": journal.meta,
+        # Modelled per-cycle communication volume of the configured comm
+        # path plus the decomposition's shared-slot fraction (both from
+        # the journal; the model prices solve_shardmap traffic even when
+        # the arm ran the vmapped solver).
+        "comm_bytes_per_cycle": [r.comm_bytes_per_cycle
+                                 for r in journal.records],
+        "halo_fraction": [r.halo_fraction for r in journal.records],
+        "loads_weighted_final": journal.records[-1].loads_weighted,
         "imbalance_trajectory": imb,
         "imbalance_final": imb[-1],
         "efficiency_trajectory": [r.efficiency for r in journal.records],
@@ -75,6 +95,47 @@ def run_arm(name: str, rebalance: bool, args) -> dict:
         "migrated_total": journal.migrated_total,
         "summary": journal.summary(),
     }
+
+
+def comm_sweep(args) -> dict:
+    """Modelled per-iteration state-exchange bytes vs overlap width s.
+
+    For the benchmark's 1D and 2D domain shapes (uniform boundaries —
+    the model depends only on the decomposition geometry), price both
+    communication paths at s = 0..3: the allreduce path is flat in s
+    (it always moves the full n-vector), the neighbour path grows
+    linearly with s and never depends on n — the scaling regime the
+    paper's T^p_oh overhead term assumes.
+    """
+    itemsize = 8  # the benchmark engines run under jax_enable_x64
+    out = {}
+    domains = {
+        "1d": domain.Interval1D(n=args.n, p=args.p),
+        "2d": domain.ShelfTiling2D(nx=args.nx, ny=args.ny,
+                                   pr=args.pr, pc=args.pc),
+    }
+    for key, dom in domains.items():
+        rows = {}
+        # stacked rows: the background block (dom.n) + observations
+        m = dom.n + args.m
+        for s in range(4):
+            dec = dom.decomposition(overlap=s)
+            halo = dec.halo_exchange
+            alla = ddkf.comm_model(dom.n, m, dom.p, itemsize,
+                                   comm="allreduce")
+            neigh = ddkf.comm_model(dom.n, m, dom.p, itemsize,
+                                    halo=halo, comm="neighbour")
+            rows[f"s{s}"] = {
+                "halo_fraction": dec.halo_fraction,
+                "allreduce_state_bytes_per_device":
+                    alla["state_bytes_per_device_mean"],
+                "neighbour_state_bytes_per_device":
+                    neigh["state_bytes_per_device_mean"],
+                "neighbour_per_edge_bytes": neigh["per_edge_bytes"],
+                "permute_rounds": neigh["permute_rounds"],
+            }
+        out[key] = rows
+    return out
 
 
 def main() -> None:
@@ -99,6 +160,17 @@ def main() -> None:
                     help="shardmap needs one device per subdomain")
     ap.add_argument("--overlap", type=int, default=0,
                     help="Schwarz halo width")
+    ap.add_argument("--comm", default="allreduce",
+                    choices=("allreduce", "neighbour"),
+                    help="sharded state-exchange path (neighbour = "
+                    "halo-only ppermute rounds)")
+    ap.add_argument("--halo-weight", type=float, default=0.0,
+                    help="overlap-aware DyDD: work units per halo column "
+                    "added to the scheduled loads")
+    ap.add_argument("--compare-comm", action="store_true",
+                    help="also run the DyDD arm with both comm paths and "
+                    "record wall-clock + modelled bytes side by side "
+                    "(meaningful with --solver shardmap)")
     ap.add_argument("--scenarios", nargs="*", default=None,
                     choices=streams.available(),
                     help="subset of the registered scenarios "
@@ -113,8 +185,12 @@ def main() -> None:
                    "pr": args.pr, "pc": args.pc, "m": args.m,
                    "cycles": args.cycles, "iters": args.iters,
                    "seed": args.seed, "threshold": args.threshold,
-                   "solver": args.solver, "overlap": args.overlap},
+                   "solver": args.solver, "overlap": args.overlap,
+                   "comm": args.comm, "halo_weight": args.halo_weight},
         "scenarios": {},
+        # Modelled bytes vs overlap width for both comm paths (no runs
+        # needed — the model depends only on the decomposition).
+        "comm_sweep": comm_sweep(args),
     }
     for name in names:
         ndim = streams.get(name).ndim
@@ -132,6 +208,31 @@ def main() -> None:
                 static["imbalance_final"]
                 / max(dydd["imbalance_final"], 1e-12)),
         }
+        if args.compare_comm:
+            # Allreduce-vs-neighbour on the same scenario: measured
+            # wall-clock next to modelled per-cycle bytes.  The dydd arm
+            # above already ran with args.comm — only the other path
+            # needs a fresh run.
+            compare = {}
+            for comm in ("allreduce", "neighbour"):
+                if comm == args.comm:
+                    arm = dydd
+                else:
+                    print(f"[streaming_bench]   comm={comm} ...",
+                          file=sys.stderr)
+                    arm = run_arm(name, rebalance=True, args=args,
+                                  comm=comm)
+                compare[comm] = {
+                    "solve_time_mean_s": arm["solve_time_mean_s"],
+                    "cycle_latency_steady_s": arm["cycle_latency_steady_s"],
+                    "comm_bytes_per_cycle_mean": float(
+                        np.mean(arm["comm_bytes_per_cycle"])),
+                }
+            compare["modelled_bytes_ratio"] = float(
+                compare["allreduce"]["comm_bytes_per_cycle_mean"]
+                / max(compare["neighbour"]["comm_bytes_per_cycle_mean"],
+                      1e-12))
+            report["scenarios"][name]["comm_compare"] = compare
 
     # Autotuned gram reduction tiles (chosen block_m + timed sweep per
     # packed shape; empty when every pack took the jnp reference path).

@@ -37,7 +37,8 @@ def make_config(args) -> EngineConfig:
     common = dict(iters=args.iters, rebalance=not args.static,
                   imbalance_threshold=args.threshold,
                   hysteresis=args.hysteresis, track_reference=True,
-                  solver=args.solver, overlap=args.overlap)
+                  solver=args.solver, overlap=args.overlap,
+                  comm=args.comm, halo_weight=args.halo_weight)
     if args.ndim == 1:
         return EngineConfig(n=args.n, p=args.p, **common)
     return EngineConfig(ndim=2, nx=args.nx, ny=args.ny, pr=args.pr,
@@ -65,6 +66,8 @@ def run_scenario(name: str, args) -> None:
                   f"{dom['nx']}x{dom['ny']} mesh")
     solver = cfg.solver + (f" on mesh {dict(eng.mesh.shape)}"
                            if eng.mesh is not None else "")
+    if cfg.solver == "shardmap":
+        solver += f", comm={cfg.comm}"
     print(f"\n=== {name} ({'static DD' if args.static else 'DyDD'}, "
           f"{shape}, overlap={cfg.overlap}, {solver}, m={args.m}, "
           f"{args.cycles} cycles) ===")
@@ -84,6 +87,11 @@ def run_scenario(name: str, args) -> None:
           f"{s['migrated_total']} observations migrated, "
           f"max imbalance {s['imbalance_max']:.3f}, "
           f"max error vs one-shot solve {s['error_max']:.2e}")
+    if cfg.overlap > 0:
+        print(f"comm ({cfg.comm}): "
+              f"{s['comm_bytes_per_cycle_mean'] / 1e3:.1f} kB/cycle "
+              f"modelled, halo fraction "
+              f"{s['halo_fraction_mean']:.3f}")
 
 
 def main() -> None:
@@ -117,6 +125,13 @@ def main() -> None:
     ap.add_argument("--overlap", type=int, default=0,
                     help="Schwarz halo width (mesh columns/rows absorbed "
                     "from each grid-graph neighbour)")
+    ap.add_argument("--comm", default="allreduce",
+                    choices=("allreduce", "neighbour"),
+                    help="sharded state exchange: full n-vector allreduce "
+                    "or halo-only neighbour ppermute rounds")
+    ap.add_argument("--halo-weight", type=float, default=0.0,
+                    help="overlap-aware DyDD: work units per halo column "
+                    "added to the loads the schedule balances")
     ap.add_argument("--scenarios", nargs="*", default=None,
                     choices=streams.available(),
                     help="subset of the registered scenarios "

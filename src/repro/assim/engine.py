@@ -38,6 +38,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import cls as cls_mod
+from repro.core import dd as dd_mod
 from repro.core import ddkf as ddkf_mod
 from repro.core import domain as domain_mod
 from repro.core import dydd as dydd_mod
@@ -100,6 +101,13 @@ class EngineConfig:
     obs_noise: float = 1e-3           # observation data noise
     truth_drift: float = 0.05         # per-cycle truth random-walk scale
     solver: str = "vmapped"           # "vmapped" | "shardmap"
+    comm: str = "allreduce"           # sharded overlap exchange:
+                                      # "allreduce" (full n-vector) |
+                                      # "neighbour" (halo-only ppermute)
+    halo_weight: float = 0.0          # overlap-aware DyDD: work units per
+                                      # halo column added to the loads the
+                                      # diffusion schedule balances (0 =
+                                      # unweighted, the historic policy)
 
 
 def _domain_from_config(cfg: EngineConfig) -> domain_mod.Domain:
@@ -134,11 +142,17 @@ class _Prepared:
     y1: np.ndarray                # observation data (truth-driven)
     loads: np.ndarray             # post-repartition per-subdomain counts
     loads_before: np.ndarray      # counts against the incoming boundaries
+    loads_weighted: np.ndarray    # loads + halo-cost offsets (the
+                                  # overlap-aware schedule's view)
     imbalance_before: float
     repartitioned: bool
     migrated: int
     rounds: int
     pack_time: float
+    halo: "dd_mod.HaloExchange | None"  # neighbour-exchange schedule of
+                                        # the cycle's decomposition
+    comm_bytes_per_cycle: float
+    halo_fraction: float
 
 
 class AssimilationEngine:
@@ -167,6 +181,12 @@ class AssimilationEngine:
         self.forecast = forecast or (lambda x: x)
         if config.solver not in ("vmapped", "shardmap"):
             raise ValueError(f"unknown solver {config.solver!r}")
+        if config.comm not in ("allreduce", "neighbour"):
+            raise ValueError(f"comm must be 'allreduce' or 'neighbour' "
+                             f"(got {config.comm!r})")
+        if config.halo_weight < 0:
+            raise ValueError(f"halo_weight is a per-halo-column work cost "
+                             f"and must be >= 0 (got {config.halo_weight})")
         if config.overlap < 0:
             raise ValueError(
                 f"overlap is a halo width and must be >= 0 "
@@ -257,6 +277,16 @@ class AssimilationEngine:
 
     # -- host-side cycle preparation (runs on the worker thread) -----------
 
+    def _halo_offsets(self) -> np.ndarray | None:
+        """Per-subdomain halo-cost offsets for the overlap-aware DyDD
+        weighting, from the *current* boundaries (the decomposition the
+        rebalance decision is looking at) — None when the weighting is
+        off or there is no overlap to weigh."""
+        if self.cfg.halo_weight <= 0 or self.cfg.overlap <= 0:
+            return None
+        dec = self.domain.decomposition(overlap=self.cfg.overlap)
+        return self.cfg.halo_weight * dec.halo_sizes
+
     def _prepare(self, cycle: int, obs: np.ndarray) -> _Prepared:
         t0 = time.perf_counter()
         cfg = self.cfg
@@ -266,13 +296,22 @@ class AssimilationEngine:
         imb_before = imbalance_ratio(loads_in)
         repartitioned, migrated, rounds = False, 0, 0
         if self._should_rebalance(loads_in):
-            info = self.domain.rebalance(obs)
+            info = self.domain.rebalance(obs,
+                                         cost_offsets=self._halo_offsets())
             repartitioned = True
             migrated = info.migrated
             rounds = info.rounds
         loads = self.domain.counts(obs)
 
         dec = self.domain.decomposition(overlap=cfg.overlap)
+        # Weighted loads: what the overlap-aware schedule balances (the
+        # plain counts when halo_weight is 0).
+        loads_weighted = loads + np.rint(
+            cfg.halo_weight * dec.halo_sizes).astype(np.int64)
+        # Neighbour-exchange schedule (cached on the Decomposition; empty
+        # edge set when there is no overlap) — the comm model prices the
+        # neighbour path even when the solve runs allreduce/vmapped.
+        halo = dec.halo_exchange
         H1 = cls_mod.observation_operator(self.n,
                                           self.domain.obs_positions(obs),
                                           block=self.domain.row_size)
@@ -292,13 +331,23 @@ class AssimilationEngine:
         y1 = H1 @ self._truth + cfg.obs_noise * self._rng.normal(
             size=H1.shape[0])
 
+        # Modelled per-cycle communication volume for the configured
+        # state-exchange path (with no overlap the neighbour path moves
+        # no state bytes at all — only the m-vector all-reduce remains).
+        stats = packed_op.comm_stats(halo=halo, comm=cfg.comm)
+        comm_bytes = stats["bytes_per_iter_total"] * cfg.iters
+
         return _Prepared(cycle=cycle, obs=obs, packed_op=packed_op,
                          H0=self._H0, H1=H1, y1=y1, loads=loads,
                          loads_before=loads_in,
+                         loads_weighted=loads_weighted,
                          imbalance_before=imb_before,
                          repartitioned=repartitioned, migrated=migrated,
                          rounds=rounds,
-                         pack_time=time.perf_counter() - t0)
+                         pack_time=time.perf_counter() - t0,
+                         halo=halo,
+                         comm_bytes_per_cycle=float(comm_bytes),
+                         halo_fraction=dec.halo_fraction)
 
     # -- device-side solve (main thread) -----------------------------------
 
@@ -314,7 +363,8 @@ class AssimilationEngine:
             x = ddkf_mod.solve_shardmap(packed, self.mesh,
                                         axis=self.mesh_axis,
                                         iters=cfg.iters,
-                                        damping=cfg.damping)
+                                        damping=cfg.damping,
+                                        comm=cfg.comm, halo=prep.halo)
         else:
             x = ddkf_mod.solve_vmapped(packed, iters=cfg.iters,
                                        damping=cfg.damping)
@@ -404,4 +454,7 @@ class AssimilationEngine:
             pack_time=prep.pack_time,
             solve_time=solve_time,
             cycle_time=cycle_time,
-            error_vs_direct=err))
+            error_vs_direct=err,
+            comm_bytes_per_cycle=prep.comm_bytes_per_cycle,
+            halo_fraction=prep.halo_fraction,
+            loads_weighted=[int(v) for v in prep.loads_weighted]))

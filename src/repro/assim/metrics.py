@@ -44,10 +44,23 @@ class CycleMetrics:
 
     error_vs_direct: float      # ||x_engine - x_one_shot||, nan if untracked
 
+    # Communication accounting (modelled — solve_shardmap's per-iteration
+    # send volume for the cycle's decomposition and configured comm path,
+    # times the iteration count; journalled for every solver so vmapped
+    # runs still show what a sharded run would move).
+    comm_bytes_per_cycle: float = 0.0   # total modelled bytes per cycle
+    halo_fraction: float = 0.0          # shared-slot fraction of the
+                                        # decomposition (0 = no overlap)
+    loads_weighted: list = dataclasses.field(default_factory=list)
+                                # obs loads + halo-cost offsets — what the
+                                # overlap-aware DyDD schedule balances
+                                # (== loads when halo_weight is 0)
+
     def to_dict(self) -> dict:
         d = dataclasses.asdict(self)
         d["loads"] = [int(v) for v in self.loads]
         d["loads_before"] = [int(v) for v in self.loads_before]
+        d["loads_weighted"] = [int(v) for v in self.loads_weighted]
         # nan (error untracked) is not valid JSON — serialize as null.
         if not np.isfinite(self.error_vs_direct):
             d["error_vs_direct"] = None
@@ -109,6 +122,10 @@ class Journal:
                 [r.solve_time for r in self.records])),
             "error_max": float(np.nanmax(errs)) if np.isfinite(
                 errs).any() else None,
+            "comm_bytes_per_cycle_mean": float(np.mean(
+                [r.comm_bytes_per_cycle for r in self.records])),
+            "halo_fraction_mean": float(np.mean(
+                [r.halo_fraction for r in self.records])),
         }
 
     def to_dict(self) -> dict:

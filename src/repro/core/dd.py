@@ -17,6 +17,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+from collections import defaultdict
 from typing import Sequence
 
 import numpy as np
@@ -50,6 +51,96 @@ def extend_vec(w: jax.Array, idx: jax.Array, size: int) -> jax.Array:
     (Definition 4): out[idx] = w, zero elsewhere."""
     out = jnp.zeros((size,), dtype=w.dtype)
     return out.at[idx].set(w)
+
+
+# ---------------------------------------------------------------------------
+# Neighbour-only halo exchange metadata.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class HaloExchange:
+    """Precomputed neighbour-exchange schedule of a Decomposition.
+
+    The paper's overhead model (T^p_oh) charges each subdomain only for
+    traffic with its grid-graph neighbours; this object is the machinery
+    that realizes exactly that communication pattern on device.  It is
+    graph-general: an *edge* is any pair of subdomains whose column sets
+    intersect — the grid-graph neighbours for a cross-shaped 2D halo, the
+    chain neighbours in 1D, plus any halo∩halo pairs a wide overlap
+    creates (e.g. diagonal cells whose halos meet at a tiling corner).
+
+    Edges are greedily edge-coloured so that each colour class is a
+    matching of the processor graph: one ``jax.lax.ppermute`` round per
+    class exchanges both directions of every edge in the class without
+    any device appearing twice.  Payloads are padded to the widest edge
+    (``h`` lanes); slot ``w`` of the padded local vector is the dump slot
+    both for gather padding (reads zero) and scatter padding.
+
+    Attributes:
+      p: subdomain count.
+      w: padded local slot width (= ``max |col_set|``, the PackedDD pad
+        width); also the dump slot index.
+      h: widest per-edge shared-column count (payload lanes per round).
+      rounds: number of colour classes (ppermute rounds per iteration).
+      edges: ((i, j), ...) with i < j — column-sharing subdomain pairs.
+      shared: per edge, the ascending global column indices both own.
+      send_slots: per edge, ``(slots_in_i, slots_in_j)`` — positions of
+        ``shared`` inside each endpoint's local column set.  Endpoint i
+        gathers its payload at ``slots_in_i`` and endpoint j scatters the
+        received payload at ``slots_in_j`` (and vice versa): the send map
+        of one side *is* the recv map of the other.
+      colors: (E,) colour class (= ppermute round) of each edge.
+      perms: per round, the ((src, dst), ...) pairs handed to ppermute —
+        both directions of every edge in the class.
+      slot_idx: (p, rounds, h) int array — device d's payload lane k in
+        round r gathers from / scatters to local slot ``slot_idx[d, r, k]``
+        (``w`` = dump for unused lanes and idle devices).
+    """
+
+    p: int
+    w: int
+    h: int
+    rounds: int
+    edges: tuple
+    shared: tuple
+    send_slots: tuple
+    colors: np.ndarray
+    perms: tuple
+    slot_idx: np.ndarray
+
+    def edge_send_bytes(self, itemsize: int) -> dict:
+        """Per-iteration bytes each endpoint of each edge sends, keyed
+        ``"i-j"`` (JSON-friendly) — the single source of the per-edge
+        pricing every accounting layer (``ddkf.comm_model``,
+        ``PackedDD.edge_send_bytes``, the bench JSON) derives from."""
+        return {f"{i}-{j}": int(s.size) * int(itemsize)
+                for (i, j), s in zip(self.edges, self.shared)}
+
+    def device_send_bytes(self, itemsize: int) -> np.ndarray:
+        """(p,) per-iteration bytes each device sends over all its edges."""
+        out = np.zeros((self.p,), dtype=np.int64)
+        for (i, j), s in zip(self.edges, self.shared):
+            out[i] += s.size * int(itemsize)
+            out[j] += s.size * int(itemsize)
+        return out
+
+
+def _greedy_edge_coloring(edges) -> np.ndarray:
+    """Colour edges so no two edges of one colour share a vertex (each
+    colour class is a matching — one conflict-free ppermute round).
+    Greedy over lexicographically sorted edges uses at most 2*maxdeg - 1
+    colours; on a pr x pc grid graph it lands on the classic <= 4
+    (horizontal/vertical x even/odd parity) classes."""
+    used = defaultdict(set)
+    colors = np.zeros((len(edges),), dtype=np.int64)
+    for k, (i, j) in enumerate(edges):
+        c = 0
+        while c in used[i] or c in used[j]:
+            c += 1
+        colors[k] = c
+        used[i].add(c)
+        used[j].add(c)
+    return colors
 
 
 # ---------------------------------------------------------------------------
@@ -108,6 +199,76 @@ class Decomposition:
         """True iff some column is shared (multiplicity > 1) — what gates
         the mu-regularization term of eq. 25/26."""
         return bool(self.column_multiplicity.max(initial=0) > 1)
+
+    @property
+    def pad_width(self) -> int:
+        """The padded local slot width w = max |col_set| (>= 1) — the
+        layout ``ddkf.pack_operator`` packs into and the dump slot index
+        of the halo-exchange payload maps."""
+        return max(1, max((int(np.asarray(c).shape[0])
+                           for c in self.col_sets), default=1))
+
+    @functools.cached_property
+    def halo_sizes(self) -> np.ndarray:
+        """(p,) count of halo columns (multiplicity > 1) each subdomain
+        carries — the per-subdomain overlap work the overlap-aware DyDD
+        weighting adds to the observation loads."""
+        counts = self.column_multiplicity
+        return np.array([int((counts[np.asarray(c)] > 1).sum())
+                         for c in self.col_sets], dtype=np.int64)
+
+    @functools.cached_property
+    def halo_fraction(self) -> float:
+        """Fraction of owned column slots that are halo (shared) slots —
+        0.0 for a non-overlapping decomposition."""
+        total = sum(int(np.asarray(c).shape[0]) for c in self.col_sets)
+        return float(self.halo_sizes.sum() / total) if total else 0.0
+
+    @functools.cached_property
+    def halo_exchange(self) -> HaloExchange:
+        """Cached neighbour-exchange schedule (see :class:`HaloExchange`).
+
+        Edges are discovered from actual ``col_sets`` intersections via an
+        inverted owner index (O(n * multiplicity^2)), so the schedule is
+        correct on any graph — including the halo∩halo pairs a wide
+        overlap creates between non-adjacent subdomains.  Empty-core
+        subdomains own no columns, so they acquire no edges and their
+        ``slot_idx`` rows are all dump.
+        """
+        sets = [np.asarray(c) for c in self.col_sets]
+        w = self.pad_width
+        # Inverted index: columns with multiplicity > 1 -> owner pairs.
+        owners = defaultdict(list)
+        for i, c in enumerate(sets):
+            for col in c[self.column_multiplicity[c] > 1].tolist():
+                owners[col].append(i)
+        edge_cols = defaultdict(list)
+        for col, own in owners.items():
+            for a in range(len(own)):
+                for b in range(a + 1, len(own)):
+                    edge_cols[(own[a], own[b])].append(col)
+        edges = tuple(sorted(edge_cols))
+        colors = _greedy_edge_coloring(edges)
+        rounds = int(colors.max()) + 1 if len(edges) else 0
+        shared = tuple(np.array(sorted(edge_cols[e]), dtype=np.int64)
+                       for e in edges)
+        h = max((s.size for s in shared), default=0)
+        send_slots = []
+        slot_idx = np.full((self.p, rounds, h), w, dtype=np.int64)
+        perms: list = [[] for _ in range(rounds)]
+        for (i, j), s, c in zip(edges, shared, colors):
+            # col_sets are ascending, so position-in-set == searchsorted.
+            si = np.searchsorted(sets[i], s)
+            sj = np.searchsorted(sets[j], s)
+            send_slots.append((si.astype(np.int64), sj.astype(np.int64)))
+            slot_idx[i, c, :s.size] = si
+            slot_idx[j, c, :s.size] = sj
+            perms[int(c)] += [(i, j), (j, i)]
+        return HaloExchange(p=self.p, w=w, h=h, rounds=rounds,
+                           edges=edges, shared=shared,
+                           send_slots=tuple(send_slots), colors=colors,
+                           perms=tuple(tuple(pr) for pr in perms),
+                           slot_idx=slot_idx)
 
     def overlap_sets(self):
         """I_{i,i+1} — shared indices between consecutive subdomains."""

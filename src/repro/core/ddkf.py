@@ -14,11 +14,20 @@ Two execution paths share the same step function:
   * ``solve_vmapped``   — subdomains on the leading axis of a batch
                           (single-device correctness/reference path);
   * ``solve_shardmap``  — one device per subdomain on a 1D chain or a
-                          2D ``pr x pc`` grid mesh (the production path;
-                          ``psum`` for the m-vector, ``psum_scatter`` +
-                          ``all_gather`` for the overlap exchange;
+                          2D ``pr x pc`` grid mesh (the production path,
                           exercised under forced multi-device XLA in
-                          tests and by the launch dry-run).
+                          tests and by the launch dry-run).  The m-vector
+                          all-reduce is a ``psum`` or — in the dense-
+                          network regime m >> n — a ``psum_scatter`` +
+                          ``all_gather`` pair; the overlap exchange is
+                          either the same reduce-scatter pair on the
+                          (n,) assembly (``comm="allreduce"``) or
+                          neighbour-only ``ppermute`` rounds of just the
+                          halo slots over the decomposition's coloured
+                          edge schedule (``comm="neighbour"`` — the
+                          paper's T^p_oh pattern: per-iteration traffic
+                          proportional to the overlap width s, not n).
+                          :func:`comm_model` prices both paths.
 
 Static shapes: local blocks are padded to the max block width; padded
 columns carry an identity diagonal in the local normal matrix and zero
@@ -42,7 +51,8 @@ from repro.kernels import ops as ops_mod
 
 @partial(jax.tree_util.register_dataclass,
          data_fields=("A_loc", "L_loc", "cols", "mask", "muov", "wdiv",
-                      "mult", "r", "b"),
+                      "mult", "mult_loc", "scatter_cols", "gather_cols",
+                      "r", "b"),
          meta_fields=("n", "p", "w"))
 @dataclasses.dataclass(frozen=True)
 class PackedDD:
@@ -56,11 +66,93 @@ class PackedDD:
     wdiv: jax.Array       # (p, w) mask / column-multiplicity: partition of
                           # unity so sum_i A_i (x_i * wdiv_i) == A x_glob
     mult: jax.Array       # (n,) column multiplicity (overlap counting)
+    mult_loc: jax.Array   # (p, w) multiplicity gathered to local slots
+                          # (1.0 on padding) — the neighbour-exchange
+                          # assembly divisor
+    scatter_cols: jax.Array  # (p, w) cols with padding redirected to the
+                             # dump slot n — precomputed scatter map
+    gather_cols: jax.Array   # (p, w) cols with padding clipped to 0 —
+                             # precomputed (mask-guarded) gather map
     r: jax.Array          # (m,) weight diagonal
     b: jax.Array          # (m,) stacked data
     n: int
     p: int
     w: int
+
+    @property
+    def m(self) -> int:
+        """Stacked row count (background + observation rows)."""
+        return int(self.r.shape[0])
+
+    def edge_send_bytes(self, halo: "dd_mod.HaloExchange") -> dict:
+        """Per-iteration bytes each endpoint of each halo edge sends on
+        the ``comm='neighbour'`` path, priced at this packing's dtype."""
+        return halo.edge_send_bytes(np.dtype(self.A_loc.dtype).itemsize)
+
+    def comm_stats(self, halo: "dd_mod.HaloExchange | None" = None,
+                   comm: str = "allreduce") -> dict:
+        """Modelled per-iteration communication volume for this packing
+        (see :func:`comm_model`)."""
+        return comm_model(self.n, self.m, self.p,
+                          np.dtype(self.A_loc.dtype).itemsize,
+                          halo=halo, comm=comm)
+
+
+# Dense-network regime switch: when the stacked row count m is at least
+# this multiple of n, the (m,) observation-space product dominates the
+# per-iteration traffic and the solve reduce-scatters it along the
+# innermost mesh axis (bandwidth-optimal all-reduce) instead of a plain
+# psum — the ROADMAP "psum_scatter the (m,) product when m >> n" item.
+MVEC_SCATTER_RATIO = 2.0
+
+
+def comm_model(n: int, m: int, p: int, itemsize: int,
+               halo: "dd_mod.HaloExchange | None" = None,
+               comm: str = "allreduce") -> dict:
+    """Modelled per-iteration send volume of one ``solve_shardmap`` sweep.
+
+    The model counts payload bytes leaving each device per Schwarz
+    iteration, the quantity the paper's overhead term T^p_oh charges:
+
+      * ``mvec`` — the (m,) observation-space product every path
+        all-reduces: ~2 * (p-1)/p * m elements per device for a
+        bandwidth-optimal (reduce-scatter + all-gather) all-reduce.
+      * state exchange — ``comm="allreduce"``: the (n,)-assembled
+        estimate, ~2 * (p-1)/p * n elements per device, *independent of
+        the overlap width*; ``comm="neighbour"``: only the halo slots,
+        ``sum(|shared|)`` elements per edge endpoint — proportional to
+        the overlap width s and to nothing else.
+
+    Returns a JSON-ready dict with per-device and total bytes plus the
+    per-edge breakdown (empty for the allreduce path).
+    """
+    if comm not in ("allreduce", "neighbour"):
+        raise ValueError(f"comm must be 'allreduce' or 'neighbour' "
+                         f"(got {comm!r})")
+    ring = 2.0 * (p - 1) / p if p > 1 else 0.0
+    mvec_dev = ring * m * itemsize
+    if comm == "allreduce":
+        state_dev = np.full((p,), ring * n * itemsize)
+        per_edge: dict = {}
+        rounds = 0
+    else:
+        if halo is None:
+            raise ValueError("comm='neighbour' needs the decomposition's "
+                             "halo_exchange metadata")
+        state_dev = halo.device_send_bytes(itemsize).astype(np.float64)
+        per_edge = halo.edge_send_bytes(itemsize)
+        rounds = halo.rounds
+    return {
+        "comm": comm,
+        "mvec_bytes_per_device": float(mvec_dev),
+        "state_bytes_per_device_max": float(state_dev.max(initial=0.0)),
+        "state_bytes_per_device_mean": float(state_dev.mean()
+                                             if p else 0.0),
+        "state_bytes_total": float(state_dev.sum()),
+        "bytes_per_iter_total": float(state_dev.sum() + p * mvec_dev),
+        "per_edge_bytes": per_edge,
+        "permute_rounds": rounds,
+    }
 
 
 def pack(prob: cls_mod.CLSProblem, dec: dd_mod.Decomposition,
@@ -145,10 +237,19 @@ def pack_operator(A: jax.Array, r: jax.Array, dec: dd_mod.Decomposition,
                             gram_mode=gram_mode, gram_block=gram_block)
     mult_at = np.maximum(counts, 1)[np.clip(cols, 0, n - 1)]
     wdiv = mask / mult_at
+    # Precomputed index maps: scatter redirects padding to the dump slot
+    # n, gather clips it to 0 (mask kills the value) — built once here
+    # instead of a where(cols >= 0, ...) membership mask per call.
+    mult_loc = np.where(cols >= 0, mult_at, 1.0)
+    scatter_cols = np.where(cols >= 0, cols, n)
+    gather_cols = np.where(cols >= 0, cols, 0)
     return PackedDD(A_loc=A_loc, L_loc=L_loc,
                     cols=jnp.asarray(cols), mask=jnp.asarray(mask),
                     muov=jnp.asarray(muov), wdiv=jnp.asarray(wdiv),
                     mult=jnp.asarray(np.maximum(counts, 1)).astype(A.dtype),
+                    mult_loc=jnp.asarray(mult_loc, A_loc.dtype),
+                    scatter_cols=jnp.asarray(scatter_cols),
+                    gather_cols=jnp.asarray(gather_cols),
                     r=r, b=jnp.zeros((m,), dtype=A_loc.dtype), n=n, p=p,
                     w=w)
 
@@ -202,17 +303,18 @@ def solve_vmapped(packed: PackedDD, iters: int = 60,
 
 
 def assemble(packed: PackedDD, x_loc: jax.Array) -> jax.Array:
-    """Scatter local iterates into the global vector, averaging overlaps."""
-    flat_cols = jnp.where(packed.cols >= 0, packed.cols, packed.n)
+    """Scatter local iterates into the global vector, averaging overlaps.
+
+    Uses the scatter map precomputed at pack time (padding lands on the
+    dump slot n) — no per-call membership mask rebuild."""
     acc = jnp.zeros((packed.n + 1,), dtype=x_loc.dtype)
-    acc = acc.at[flat_cols.reshape(-1)].add(
+    acc = acc.at[packed.scatter_cols.reshape(-1)].add(
         (x_loc * packed.mask).reshape(-1))
     return acc[:packed.n] / packed.mult
 
 
 def gather_local(packed: PackedDD, x_glob: jax.Array) -> jax.Array:
-    safe = jnp.where(packed.cols >= 0, packed.cols, 0)
-    return x_glob[safe] * packed.mask
+    return x_glob[packed.gather_cols] * packed.mask
 
 
 # ---------------------------------------------------------------------------
@@ -220,7 +322,10 @@ def gather_local(packed: PackedDD, x_glob: jax.Array) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 def solve_shardmap(packed: PackedDD, mesh, axis="sub",
-                   iters: int = 60, damping: float = 1.0) -> jax.Array:
+                   iters: int = 60, damping: float = 1.0,
+                   comm: str = "allreduce",
+                   halo: "dd_mod.HaloExchange | None" = None,
+                   mvec: str = "auto") -> jax.Array:
     """Same iteration with one device per subdomain, on a 1D or 2D mesh.
 
     ``axis`` is one mesh axis name or a tuple of names — pass
@@ -228,14 +333,29 @@ def solve_shardmap(packed: PackedDD, mesh, axis="sub",
     of a ``pr x pc`` mesh (the paper's processor topology: grid axes map
     onto the mesh axes, so neighbour-halo traffic stays on-axis).
 
-    Per iteration the communication is one ``psum`` of the (m,) product —
-    the m-vector all-reduce the paper accounts as overhead — plus the
-    overlap-averaging exchange of the (n,) assembled estimate, done as a
-    ``psum_scatter`` + ``all_gather`` pair along the innermost mesh axis
-    (reduce-scatter is the bandwidth-optimal form of that all-reduce on a
-    real torus; for a banded A it would further specialize to neighbour
-    ppermute, we keep the general graph form).  Only the n-vector moves —
-    the (w,) local iterates never leave their device.
+    Per iteration the communication is the all-reduce of the (m,)
+    observation-space product — ``mvec="psum"`` as a plain psum, or
+    ``mvec="scatter"`` as the bandwidth-optimal reduce-scatter +
+    all-gather pair along the innermost axis; ``"auto"`` picks scatter
+    in the dense-network regime (m >= ``MVEC_SCATTER_RATIO`` * n, read
+    off the packed shapes) — plus the overlap-consistency exchange of
+    the state estimate, with two paths:
+
+      * ``comm="allreduce"`` — assemble the full (n,) global estimate
+        with psum_scatter + all_gather along the innermost mesh axis and
+        gather back.  O(n) bytes per device per iteration regardless of
+        the overlap width.
+      * ``comm="neighbour"`` — the paper's T^p_oh communication pattern:
+        ``jax.lax.ppermute`` rounds over the precomputed edge schedule
+        (``halo`` = the decomposition's cached ``halo_exchange``; one
+        permute per graph-colouring class), exchanging *only the halo
+        slots*.  O(s) bytes per device per iteration — proportional to
+        the overlap width, not the problem size.  Multiplicity-1 columns
+        never leave their device; the single full-vector assembly happens
+        once, after the final iteration, to emit the global estimate.
+
+    Both paths iterate the identical additive-Schwarz update and agree to
+    reduction-order ULPs (collective associativity only).
     """
     axes = (axis,) if isinstance(axis, str) else tuple(axis)
     sizes = [mesh.shape[a] for a in axes]
@@ -243,53 +363,117 @@ def solve_shardmap(packed: PackedDD, mesh, axis="sub",
         raise ValueError(
             f"mesh axes {axes} have {int(np.prod(sizes))} devices but the "
             f"packing has p={packed.p} subdomains")
-    # Innermost axis carries the scatter; pad the accumulator so its
-    # length splits evenly (the last slot doubles as the -1-column dump).
+    if comm not in ("allreduce", "neighbour"):
+        raise ValueError(f"comm must be 'allreduce' or 'neighbour' "
+                         f"(got {comm!r})")
+    if comm == "neighbour":
+        if halo is None:
+            raise ValueError(
+                "comm='neighbour' needs the halo-exchange schedule: pass "
+                "halo=dec.halo_exchange (cached on the Decomposition)")
+        if halo.p != packed.p or halo.w != packed.w:
+            raise ValueError(
+                f"halo schedule shape (p={halo.p}, w={halo.w}) does not "
+                f"match the packing (p={packed.p}, w={packed.w})")
+    if mvec == "auto":
+        mvec = ("scatter" if packed.m >= MVEC_SCATTER_RATIO * packed.n
+                else "psum")
+    if mvec not in ("psum", "scatter"):
+        raise ValueError(f"mvec must be 'auto', 'psum' or 'scatter' "
+                         f"(got {mvec!r})")
+    ppermute_axis = axes if len(axes) > 1 else axes[0]
+    # Innermost axis carries the scatters; pad the reduced vectors so
+    # their length splits evenly (the n-vector keeps one extra slot as
+    # the -1-column dump).
     ks = int(mesh.shape[axes[-1]])
     n_pad = -(-(packed.n + 1) // ks) * ks
+    m_pad = -(-packed.m // ks) * ks
 
-    def nvec_allreduce(part):
-        """Sum an (n_pad,) partial over every mesh axis: plain psum on the
-        outer axes, reduce-scatter + all-gather on the innermost."""
+    def axis_allreduce(part):
+        """All-reduce a ks-divisible vector over every mesh axis: plain
+        psum on the outer axes, reduce-scatter + all-gather (the
+        bandwidth-optimal all-reduce on a torus) on the innermost."""
         if len(axes) > 1:
             part = jax.lax.psum(part, axes[:-1])
         chunk = jax.lax.psum_scatter(part, axes[-1], scatter_dimension=0,
                                      tiled=True)
         return jax.lax.all_gather(chunk, axes[-1], tiled=True)
 
-    def per_device(A_i, L_i, mask_i, muov_i, wdiv_i, cols_i):
+    def mvec_allreduce(part):
+        if mvec == "psum":
+            return jax.lax.psum(part, axes)
+        pad = m_pad - packed.m
+        if pad:
+            part = jnp.concatenate([part, jnp.zeros((pad,), part.dtype)])
+        return axis_allreduce(part)[:packed.m]
+
+    # Neighbour-path schedule arrays (sharded like the packing).  The
+    # perms and round count are static Python; only the per-device slot
+    # maps travel as operands.
+    rounds = halo.rounds if comm == "neighbour" else 0
+    slot_idx = (jnp.asarray(halo.slot_idx) if comm == "neighbour"
+                else jnp.zeros((packed.p, 0, 0), jnp.int64))
+
+    def per_device(A_i, L_i, mask_i, muov_i, wdiv_i, scat_i, gath_i,
+                   mloc_i, slots_i):
         # Leading axis of size 1 (= this device's subdomain).
-        A_i, L_i, mask_i, muov_i, wdiv_i, cols_i = (
-            A_i[0], L_i[0], mask_i[0], muov_i[0], wdiv_i[0], cols_i[0])
-        safe = jnp.where(cols_i >= 0, cols_i, n_pad - 1)
+        (A_i, L_i, mask_i, muov_i, wdiv_i, scat_i, gath_i, mloc_i,
+         slots_i) = (A_i[0], L_i[0], mask_i[0], muov_i[0], wdiv_i[0],
+                     scat_i[0], gath_i[0], mloc_i[0], slots_i[0])
 
         def scatter_part(x_i):
-            return jnp.zeros((n_pad,), x_i.dtype).at[safe].add(
+            # scat_i parks padding on slot n (< n_pad): same dump trick.
+            return jnp.zeros((n_pad,), x_i.dtype).at[scat_i].add(
                 x_i * mask_i)
 
+        def exchange_allreduce(x_i2):
+            # Overlap consistency (eq. 28): multiplicity-weighted average
+            # of the duplicated columns via the global assembly, then
+            # gather back.
+            x_glob = axis_allreduce(scatter_part(x_i2))[:packed.n] \
+                / packed.mult
+            return x_glob[gath_i] * mask_i
+
+        def exchange_neighbour(x_i2):
+            # Same average, neighbour-only: own contribution plus the
+            # halo slots received over the coloured ppermute rounds,
+            # divided by the local multiplicity.  Slot w is the dump: it
+            # gathers zero (payload padding) and absorbs scatter padding.
+            xm = x_i2 * mask_i
+            acc = jnp.concatenate([xm, jnp.zeros((1,), xm.dtype)])
+            xm_pad = acc
+            for rnd in range(rounds):
+                buf = xm_pad[slots_i[rnd]]
+                got = jax.lax.ppermute(buf, ppermute_axis,
+                                       perm=halo.perms[rnd])
+                acc = acc.at[slots_i[rnd]].add(got)
+            return acc[:packed.w] / mloc_i
+
+        exchange = (exchange_neighbour if comm == "neighbour"
+                    else exchange_allreduce)
+
         def body(_, x_i):
-            Ax = jax.lax.psum(A_i @ (x_i * wdiv_i), axes)
+            Ax = mvec_allreduce(A_i @ (x_i * wdiv_i))
             new = _local_update(A_i, L_i, mask_i, muov_i, x_i, Ax,
                                 packed.r, packed.b)
-            x_i2 = (1.0 - damping) * x_i + damping * new
-            # Overlap consistency (eq. 28): multiplicity-weighted average
-            # of the duplicated columns, then gather back.
-            x_glob = nvec_allreduce(scatter_part(x_i2))[:packed.n] \
-                / packed.mult
-            return x_glob[jnp.where(cols_i >= 0, cols_i, 0)] * mask_i
+            return exchange((1.0 - damping) * x_i + damping * new)
 
         x_i = jnp.zeros((packed.w,), dtype=A_i.dtype)
         x_i = jax.lax.fori_loop(0, iters, body, x_i)
-        return (nvec_allreduce(scatter_part(x_i))[:packed.n]
+        # One full assembly at the end (both paths): emit the global
+        # estimate.  On the neighbour path this is the only O(n)
+        # collective of the whole solve.
+        return (axis_allreduce(scatter_part(x_i))[:packed.n]
                 / packed.mult)[None]
 
     specs = P(axes if len(axes) > 1 else axes[0])
     fn = _compat.shard_map(
         per_device, mesh=mesh,
-        in_specs=(specs,) * 6,
+        in_specs=(specs,) * 9,
         out_specs=specs)
     out = fn(packed.A_loc, packed.L_loc, packed.mask, packed.muov,
-             packed.wdiv, packed.cols)
+             packed.wdiv, packed.scatter_cols, packed.gather_cols,
+             packed.mult_loc, slot_idx)
     return out[0]
 
 

@@ -74,8 +74,14 @@ class Domain(Protocol):
         """(p,) observation loads against the current boundaries."""
         ...
 
-    def rebalance(self, obs: np.ndarray) -> RebalanceInfo:
-        """Run DyDD on ``obs``; mutates the boundary state."""
+    def rebalance(self, obs: np.ndarray,
+                  cost_offsets: np.ndarray | None = None) -> RebalanceInfo:
+        """Run DyDD on ``obs``; mutates the boundary state.
+
+        ``cost_offsets`` (p,) is the overlap-aware weighting: fixed
+        per-subdomain work (halo-column count x weight) added to the
+        loads the diffusion schedule balances, so wide halos don't skew
+        the migration toward already-loaded subdomains."""
         ...
 
     def decomposition(self, overlap: int = 0) -> dd_mod.Decomposition:
@@ -144,9 +150,11 @@ class Interval1D:
         return dydd_mod._counts(np.asarray(obs, np.float64),
                                 self.boundaries)
 
-    def rebalance(self, obs: np.ndarray) -> RebalanceInfo:
+    def rebalance(self, obs: np.ndarray,
+                  cost_offsets: np.ndarray | None = None) -> RebalanceInfo:
         res = dydd_mod.dydd_1d(np.asarray(obs, np.float64), self._p,
-                               boundaries=self.boundaries.copy())
+                               boundaries=self.boundaries.copy(),
+                               cost_offsets=cost_offsets)
         self.boundaries = res.boundaries
         return RebalanceInfo(migrated=res.total_movement, rounds=res.rounds)
 
@@ -223,12 +231,17 @@ class ShelfTiling2D:
                                      self.y_edges,
                                      self.x_edges).reshape(-1)
 
-    def rebalance(self, obs: np.ndarray) -> RebalanceInfo:
+    def rebalance(self, obs: np.ndarray,
+                  cost_offsets: np.ndarray | None = None) -> RebalanceInfo:
+        if cost_offsets is not None:
+            cost_offsets = np.asarray(cost_offsets).reshape(self.pr,
+                                                            self.pc)
         res = dydd2d_mod.dydd_2d(np.asarray(obs, np.float64),
                                  self.pr, self.pc,
                                  y_edges=self.y_edges.copy(),
                                  x_edges=self.x_edges.copy(),
-                                 max_rounds=self.max_rounds)
+                                 max_rounds=self.max_rounds,
+                                 cost_offsets=cost_offsets)
         self.y_edges = res.y_edges
         self.x_edges = res.x_edges
         return RebalanceInfo(migrated=res.total_movement, rounds=res.rounds)

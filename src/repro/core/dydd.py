@@ -354,14 +354,45 @@ def migrate_1d(obs: np.ndarray, boundaries: np.ndarray,
     return new
 
 
+def _offset_targets(work_fin: np.ndarray, offsets: np.ndarray,
+                    total: int) -> np.ndarray:
+    """Convert balanced *work* loads back to observation targets.
+
+    work_i = obs_i + offset_i, so the migration target is
+    work_fin - offsets — clipped at zero (a subdomain whose fixed halo
+    cost already exceeds its balanced work share can hold no fewer than
+    zero observations) and renormalized to conserve the observation
+    count, shaving the deficit off the largest targets."""
+    t = np.maximum(np.asarray(work_fin, np.int64) - offsets, 0)
+    # balance() conserves totals, so sum(work_fin) = total + sum(offsets)
+    # and the clip can only push sum(t) *above* total — never below.
+    diff = int(t.sum()) - int(total)
+    assert diff >= 0, "balance() under-conserved the weighted loads"
+    while diff > 0:
+        # diff > 0 implies t.sum() > total >= 0, so max(t) >= 1.
+        i = int(np.argmax(t))
+        take = min(diff, int(t[i]))
+        t[i] -= take
+        diff -= take
+    return t
+
+
 def dydd_1d(obs: np.ndarray, p: int,
             boundaries: np.ndarray | None = None,
-            max_rounds: int = 64) -> DyDDResult:
+            max_rounds: int = 64,
+            cost_offsets: np.ndarray | None = None) -> DyDDResult:
     """Full DyDD on a 1D domain [0,1] with observation locations ``obs``.
 
     The processor graph of a 1D chain decomposition is the path graph.
     Returns the balanced boundaries and the before/after loads, mirroring
     the quantities the paper reports (l_in, l_r, l_fin, E).
+
+    ``cost_offsets`` (p,) is the overlap-aware weighting: a fixed
+    per-subdomain work term (e.g. halo-column count x weight) added to
+    the observation loads *for the scheduling step only*, so subdomains
+    that carry wide Schwarz halos are scheduled as busier and receive
+    fewer observations.  ``None`` (default) reproduces the unweighted
+    behaviour bit-for-bit.
     """
     obs = np.asarray(obs, dtype=np.float64)
     if boundaries is None:
@@ -373,9 +404,19 @@ def dydd_1d(obs: np.ndarray, p: int,
     l_r = _counts(obs, b1)
     repartitioned = not np.array_equal(b1, boundaries)
 
-    # 2) Scheduling (iterated).
+    # 2) Scheduling (iterated) — on obs + halo-cost work when weighted.
     edges = chain_edges(p)
-    l_fin, schedules = balance(l_r, edges, max_rounds=max_rounds)
+    if cost_offsets is None:
+        l_fin, schedules = balance(l_r, edges, max_rounds=max_rounds)
+    else:
+        off = np.maximum(np.rint(np.asarray(cost_offsets)), 0).astype(
+            np.int64)
+        if off.shape != (p,):
+            raise ValueError(f"cost_offsets must be shape ({p},), got "
+                             f"{off.shape}")
+        work_fin, schedules = balance(l_r + off, edges,
+                                      max_rounds=max_rounds)
+        l_fin = _offset_targets(work_fin, off, int(l_r.sum()))
 
     # 3) Migration: realize l_fin geometrically.
     b2 = migrate_1d(obs, b1, l_fin)

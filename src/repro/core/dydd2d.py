@@ -68,13 +68,20 @@ def _counts_2d(obs: np.ndarray, y_edges: np.ndarray,
 
 
 def _pass_2d(obs: np.ndarray, pr: int, pc: int, y_edges: np.ndarray,
-             x_edges: np.ndarray):
+             x_edges: np.ndarray,
+             cost_offsets: np.ndarray | None = None):
     """One y-pass + x-pass round of nested 1D DyDD.  Returns the moved
-    edges and the observation migration volume of the round."""
+    edges and the observation migration volume of the round.
+
+    ``cost_offsets`` (pr, pc) is the overlap-aware halo-cost table: the
+    y-pass sees per-strip row sums, the x-pass each strip's row."""
     moved = 0
     # --- y-pass: full 1D DyDD on strip loads (chain of strips) -----------
     if pr > 1:
-        res_y = dydd.dydd_1d(obs[:, 1], pr, boundaries=y_edges.copy())
+        res_y = dydd.dydd_1d(
+            obs[:, 1], pr, boundaries=y_edges.copy(),
+            cost_offsets=(None if cost_offsets is None
+                          else cost_offsets.sum(axis=1)))
         y_edges = res_y.boundaries
         moved += res_y.total_movement
     # --- x-pass: per strip, full 1D DyDD on cell loads --------------------
@@ -85,7 +92,10 @@ def _pass_2d(obs: np.ndarray, pr: int, pc: int, y_edges: np.ndarray,
         xs = obs[rows == r, 0]
         if xs.size == 0:
             continue  # empty strip: nothing to place, keep its edges
-        res_x = dydd.dydd_1d(xs, pc, boundaries=x_edges[r].copy())
+        res_x = dydd.dydd_1d(
+            xs, pc, boundaries=x_edges[r].copy(),
+            cost_offsets=(None if cost_offsets is None
+                          else cost_offsets[r]))
         x_edges[r] = res_x.boundaries
         moved += res_x.total_movement
     return y_edges, x_edges, moved
@@ -94,7 +104,8 @@ def _pass_2d(obs: np.ndarray, pr: int, pc: int, y_edges: np.ndarray,
 def dydd_2d(obs: np.ndarray, pr: int, pc: int,
             y_edges: np.ndarray | None = None,
             x_edges: np.ndarray | None = None,
-            max_rounds: int = 8) -> DyDD2DResult:
+            max_rounds: int = 8,
+            cost_offsets: np.ndarray | None = None) -> DyDD2DResult:
     """Balance m observations (m, 2) in [0,1)² over a pr x pc shelf tiling.
 
     Starts from the given shelf boundaries (uniform if omitted — pass the
@@ -102,10 +113,22 @@ def dydd_2d(obs: np.ndarray, pr: int, pc: int,
     y-pass/x-pass pair until every cell's load is within integer rounding
     of m/(pr·pc) or the max deviation stops improving, at most
     ``max_rounds`` times.
+
+    ``cost_offsets`` (pr, pc) adds a fixed per-cell work term (the
+    overlap-aware halo weighting — see :func:`repro.core.dydd.dydd_1d`)
+    to the loads the nested scheduling passes balance; the convergence
+    check then measures deviation of the *weighted* loads.  ``None``
+    reproduces the unweighted behaviour bit-for-bit.
     """
     obs = np.asarray(obs, dtype=np.float64)
     assert obs.ndim == 2 and obs.shape[1] == 2
     m = obs.shape[0]
+    if cost_offsets is not None:
+        cost_offsets = np.maximum(
+            np.rint(np.asarray(cost_offsets)), 0).astype(np.int64)
+        if cost_offsets.shape != (pr, pc):
+            raise ValueError(f"cost_offsets must be shape ({pr}, {pc}), "
+                             f"got {cost_offsets.shape}")
 
     y_edges = (np.linspace(0.0, 1.0, pr + 1) if y_edges is None
                else np.asarray(y_edges, np.float64).copy())
@@ -114,13 +137,18 @@ def dydd_2d(obs: np.ndarray, pr: int, pc: int,
                else np.asarray(x_edges, np.float64).copy())
     l_in = _counts_2d(obs, y_edges, x_edges)
 
-    lbar = m / (pr * pc)
+    # With halo-cost offsets the target is a balanced *weighted* load:
+    # counts + offsets vs the weighted mean.
+    off = (np.zeros((pr, pc), np.int64) if cost_offsets is None
+           else cost_offsets)
+    lbar = (m + off.sum()) / (pr * pc)
     total_moved = 0
     rounds = 0
     best_dev = np.inf
     for _ in range(max(1, max_rounds)):
-        y_new, x_new, moved = _pass_2d(obs, pr, pc, y_edges, x_edges)
-        dev = np.abs(_counts_2d(obs, y_new, x_new) - lbar).max()
+        y_new, x_new, moved = _pass_2d(obs, pr, pc, y_edges, x_edges,
+                                       cost_offsets=cost_offsets)
+        dev = np.abs(_counts_2d(obs, y_new, x_new) + off - lbar).max()
         if dev >= best_dev:
             break  # no improvement: keep the previous round's edges
         y_edges, x_edges = y_new, x_new

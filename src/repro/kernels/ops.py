@@ -73,8 +73,23 @@ def ssd_scan(x, dt, A, B, C, *, chunk: int = 256, mode: str = "auto"):
 # timed sweep; every later call (and every jit retrace with the same
 # shape) hits the cache.
 
-GRAM_BLOCK_CANDIDATES = (128, 256, 512)
+GRAM_BLOCK_CANDIDATES = (64, 128, 256, 512, 1024)
+
+# Conservative VMEM budget for one grid step's working set: half of the
+# ~16 MiB a TPU core has, leaving headroom for double buffering and the
+# Mosaic scheduler's own allocations.  Candidates whose tile footprint
+# exceeds this are rejected without being timed (a sweep that OOMs the
+# kernel is worse than a slightly narrower candidate set) and recorded
+# in the tuning report.
+GRAM_VMEM_BUDGET_BYTES = 8 * 1024 * 1024
 _GRAM_TUNE_CACHE: dict = {}
+
+
+def gram_tile_bytes(block_m: int, w: int) -> int:
+    """f32 VMEM working set of one gram grid step: the (block_m, w) A
+    tile, its row-scaled copy, the (block_m,) r tile and the (w, w)
+    accumulator scratch."""
+    return 4 * (2 * block_m * w + block_m + w * w)
 
 
 def autotune_gram_block(p: int, m: int, w: int, dtype,
@@ -82,7 +97,10 @@ def autotune_gram_block(p: int, m: int, w: int, dtype,
     """Pick block_m for a (p, m, w) gram by timing the candidates once.
 
     Cached per (shape, dtype, path); the sweep costs two kernel launches
-    per candidate (one compile+warmup, one timed).
+    per candidate (one compile+warmup, one timed).  Candidates whose
+    VMEM tile footprint exceeds :data:`GRAM_VMEM_BUDGET_BYTES` are
+    skipped (and recorded) rather than timed; the smallest candidate is
+    always kept so the sweep cannot come up empty.
     """
     # Time exactly the shape the production path runs: the native kernel
     # sees the lane (w) axis zero-padded to the 128-lane tile (ops.gram
@@ -93,10 +111,17 @@ def autotune_gram_block(p: int, m: int, w: int, dtype,
     hit = _GRAM_TUNE_CACHE.get(key)
     if hit is not None:
         return hit["block_m"]
+    candidates = sorted({min(c, m) for c in GRAM_BLOCK_CANDIDATES})
+    rejected = {bm: gram_tile_bytes(bm, w) for bm in candidates
+                if gram_tile_bytes(bm, w) > GRAM_VMEM_BUDGET_BYTES}
+    kept = [bm for bm in candidates if bm not in rejected]
+    if not kept:  # every candidate over budget: keep the narrowest
+        kept = candidates[:1]
+        rejected.pop(kept[0])
     A = jnp.ones((p, m, w), dtype)
     r = jnp.ones((p, m), dtype)
     sweep = {}
-    for bm in sorted({min(c, m) for c in GRAM_BLOCK_CANDIDATES}):
+    for bm in kept:
         jax.block_until_ready(
             _gram.gram(A, r, block_m=bm, interpret=interpret))
         t0 = time.perf_counter()
@@ -105,7 +130,9 @@ def autotune_gram_block(p: int, m: int, w: int, dtype,
         sweep[bm] = time.perf_counter() - t0
     best = min(sweep, key=sweep.get)
     _GRAM_TUNE_CACHE[key] = {"block_m": best, "time_s": sweep[best],
-                             "sweep_s": sweep}
+                             "sweep_s": sweep,
+                             "rejected_vmem": {str(bm): int(fb) for bm, fb
+                                               in rejected.items()}}
     return best
 
 

@@ -31,7 +31,25 @@ mesh = _compat.make_device_mesh((8,), ("sub",))
 x_s = ddkf.solve_shardmap(packed, mesh, axis="sub", iters=120)
 err = float(jnp.linalg.norm(x_s - x_direct))
 assert err < 1e-9, err
-print("OK", err)
+# the (m,) product reduce-scatter path (dense-network regime; here the
+# auto switch picks it since m = 528 >= 2 * n) matches the plain psum
+x_sc = ddkf.solve_shardmap(packed, mesh, axis="sub", iters=120,
+                           mvec="scatter")
+x_ps = ddkf.solve_shardmap(packed, mesh, axis="sub", iters=120,
+                           mvec="psum")
+d_m = float(np.abs(np.asarray(x_sc) - np.asarray(x_ps)).max())
+assert d_m < 1e-13, d_m
+# neighbour-only halo exchange (with overlap) matches allreduce to ULPs
+dec2 = dd.decompose_1d(prob.n, res.boundaries, overlap=2)
+packed2 = ddkf.pack(prob, dec2)
+x_a = ddkf.solve_shardmap(packed2, mesh, axis="sub", iters=120)
+x_n = ddkf.solve_shardmap(packed2, mesh, axis="sub", iters=120,
+                          comm="neighbour", halo=dec2.halo_exchange)
+d_c = float(np.abs(np.asarray(x_a) - np.asarray(x_n)).max())
+assert d_c < 1e-13, d_c
+err_n = float(jnp.linalg.norm(x_n - x_direct))
+assert err_n < 1e-9, err_n
+print("OK", err, d_m, d_c)
 """
 
 SCRIPT_2D = r"""
@@ -62,7 +80,17 @@ d = float(np.abs(np.asarray(x_v) - np.asarray(x_s)).max())
 assert d < 1e-13, d
 err = float(jnp.linalg.norm(x_s - cls.solve(prob)))
 assert err < 1e-9, err
-print("OK", d, err)
+# neighbour-only halo exchange on the 2D mesh: ppermute rounds over the
+# coloured edge schedule (grid neighbours + the corner halo∩halo pairs)
+# reproduce the allreduce exchange to reduction-order ULPs.
+x_n = ddkf.solve_shardmap(packed, mesh, axis=("row", "col"), iters=200,
+                          damping=0.7, comm="neighbour",
+                          halo=dec.halo_exchange)
+d_n = float(np.abs(np.asarray(x_s) - np.asarray(x_n)).max())
+assert d_n < 1e-13, d_n
+err_n = float(jnp.linalg.norm(x_n - cls.solve(prob)))
+assert err_n < 1e-9, err_n
+print("OK", d, err, d_n)
 """
 
 SCRIPT_ENGINE = r"""
@@ -77,8 +105,14 @@ js = AssimilationEngine(EngineConfig(solver="shardmap", **kw)).run_scenario(
     "rotating_swarm", m=160, cycles=2, seed=0)
 jv = AssimilationEngine(EngineConfig(solver="vmapped", **kw)).run_scenario(
     "rotating_swarm", m=160, cycles=2, seed=0)
-for a, b in zip(js.records, jv.records):
-    assert a.loads == b.loads and a.repartitioned == b.repartitioned
+jn = AssimilationEngine(EngineConfig(solver="shardmap", comm="neighbour",
+                                     **kw)).run_scenario(
+    "rotating_swarm", m=160, cycles=2, seed=0)
+for a, b, c in zip(js.records, jv.records, jn.records):
+    assert a.loads == b.loads == c.loads
+    assert a.repartitioned == b.repartitioned == c.repartitioned
+    # neighbour path journals strictly less modelled traffic
+    assert c.comm_bytes_per_cycle < a.comm_bytes_per_cycle
 print("OK")
 """
 

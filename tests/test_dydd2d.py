@@ -262,6 +262,32 @@ def test_gram_autotune_picks_and_caches_block():
     assert ops.gram_block_for(shape, jnp.float64, mode="auto") is None
 
 
+def test_gram_autotune_rejects_over_vmem_candidates(monkeypatch):
+    """Candidates whose tile footprint exceeds the VMEM budget are
+    skipped without being timed and recorded in the tuning report; the
+    narrowest candidate survives even under an absurdly small budget."""
+    shape = (2, 2048, 24)
+    # Budget between the smallest and largest candidate footprints
+    # (candidates are clipped to min(c, m), so the widest here is 1024).
+    budget = (ops.gram_tile_bytes(64, 24)
+              + ops.gram_tile_bytes(1024, 24)) // 2
+    monkeypatch.setattr(ops, "GRAM_VMEM_BUDGET_BYTES", budget)
+    b = ops.autotune_gram_block(*shape, jnp.float32, interpret=True)
+    key = "p2_m2048_w24_float32_interpret"
+    report = ops.gram_tuning_report()
+    assert key in report
+    rej = report[key]["rejected_vmem"]
+    assert rej, "expected at least one over-budget candidate"
+    assert str(b) not in rej
+    assert all(int(v) > budget for v in rej.values())
+    # rejected candidates were never timed
+    assert not (set(map(int, rej)) & set(report[key]["sweep_s"]))
+    # under a budget below every candidate, the narrowest one is kept
+    monkeypatch.setattr(ops, "GRAM_VMEM_BUDGET_BYTES", 1)
+    b2 = ops.autotune_gram_block(2, 512, 24, jnp.float32, interpret=True)
+    assert b2 == min(min(c, 512) for c in ops.GRAM_BLOCK_CANDIDATES)
+
+
 def test_gram_matches_ddkf_pack_normal_matrix():
     """The kernel computes exactly the normal matrices ddkf.pack builds."""
     rng = np.random.default_rng(1)

@@ -12,7 +12,15 @@ The report also carries the communication accounting: per-arm modelled
 ``comm_bytes_per_cycle`` + ``halo_fraction``, a ``comm_sweep`` section
 pricing the allreduce vs neighbour (halo-only ppermute) state exchange
 across overlap widths s = 0..3, and — with ``--compare-comm`` on a
-sharded run — measured wall-clock for both paths side by side.
+sharded run — measured wall-clock for both paths side by side plus the
+max-abs difference of their final analyses (the ULP-parity evidence).
+
+``--compare-domains`` additionally runs every 2D scenario's DyDD arm on
+both the shelf tiling and the adaptive k-d tree domain at equal p
+(pr*pc cells vs pr*pc leaves) and records final imbalance, migration
+volume and comm bytes side by side — on the anisotropic station-network
+scenarios (``satellite_track``, ``river_gauges``) the kdtree's final
+imbalance sits strictly below the shelf's.
 
   PYTHONPATH=src python benchmarks/streaming_bench.py --out streaming.json
   PYTHONPATH=src python benchmarks/streaming_bench.py \
@@ -33,12 +41,13 @@ jax.config.update("jax_enable_x64", True)
 import numpy as np  # noqa: E402
 
 from repro.assim import AssimilationEngine, EngineConfig, streams  # noqa: E402
-from repro.core import ddkf, domain  # noqa: E402
+from repro.core import ddkf, domain, kdtree  # noqa: E402
 from repro.kernels import ops  # noqa: E402
 
 
 def make_config(ndim: int, rebalance: bool, args,
-                comm: str | None = None) -> EngineConfig:
+                comm: str | None = None,
+                domain_kind: str | None = None) -> EngineConfig:
     common = dict(iters=args.iters, rebalance=rebalance,
                   imbalance_threshold=args.threshold,
                   track_reference=args.track_reference,
@@ -46,15 +55,24 @@ def make_config(ndim: int, rebalance: bool, args,
                   comm=comm or args.comm, halo_weight=args.halo_weight)
     if ndim == 1:
         return EngineConfig(n=args.n, p=args.p, **common)
+    kind = domain_kind or args.domain
+    if kind == "kdtree":
+        # Equal p: the k-d tree gets exactly as many leaves as the shelf
+        # has cells, so the comparison is like for like.
+        return EngineConfig(ndim=2, domain_kind="kdtree",
+                            p=args.pr * args.pc, nx=args.nx, ny=args.ny,
+                            damping=args.damping_2d, **common)
     return EngineConfig(ndim=2, nx=args.nx, ny=args.ny,
                         pr=args.pr, pc=args.pc, damping=args.damping_2d,
                         **common)
 
 
-def run_arm(name: str, rebalance: bool, args,
-            comm: str | None = None) -> dict:
+def run_arm(name: str, rebalance: bool, args, comm: str | None = None,
+            domain_kind: str | None = None):
+    """Run one engine arm; returns (record_dict, final_analysis)."""
     ndim = streams.get(name).ndim
-    eng = AssimilationEngine(make_config(ndim, rebalance, args, comm=comm))
+    eng = AssimilationEngine(make_config(ndim, rebalance, args, comm=comm,
+                                         domain_kind=domain_kind))
     journal = eng.run_scenario(name, m=args.m, cycles=args.cycles,
                                seed=args.seed)
     cycle_times = journal.cycle_times
@@ -94,7 +112,7 @@ def run_arm(name: str, rebalance: bool, args,
         "repartitions": journal.repartition_count,
         "migrated_total": journal.migrated_total,
         "summary": journal.summary(),
-    }
+    }, (None if eng.analysis is None else np.asarray(eng.analysis))
 
 
 def comm_sweep(args) -> dict:
@@ -113,6 +131,8 @@ def comm_sweep(args) -> dict:
         "1d": domain.Interval1D(n=args.n, p=args.p),
         "2d": domain.ShelfTiling2D(nx=args.nx, ny=args.ny,
                                    pr=args.pr, pc=args.pc),
+        "kdtree": kdtree.KDTreeDomain(nx=args.nx, ny=args.ny,
+                                      p=args.pr * args.pc),
     }
     for key, dom in domains.items():
         rows = {}
@@ -167,6 +187,15 @@ def main() -> None:
     ap.add_argument("--halo-weight", type=float, default=0.0,
                     help="overlap-aware DyDD: work units per halo column "
                     "added to the scheduled loads")
+    ap.add_argument("--domain", default="shelf",
+                    choices=("shelf", "kdtree"),
+                    help="2D domain of the main arms: shelf tiling or "
+                    "adaptive k-d tree (pr*pc leaves)")
+    ap.add_argument("--compare-domains", action="store_true",
+                    help="also run the DyDD arm of every 2D scenario "
+                    "with both the shelf and the kdtree domain at equal "
+                    "p and record final imbalance / migration volume / "
+                    "comm bytes side by side")
     ap.add_argument("--compare-comm", action="store_true",
                     help="also run the DyDD arm with both comm paths and "
                     "record wall-clock + modelled bytes side by side "
@@ -186,7 +215,8 @@ def main() -> None:
                    "cycles": args.cycles, "iters": args.iters,
                    "seed": args.seed, "threshold": args.threshold,
                    "solver": args.solver, "overlap": args.overlap,
-                   "comm": args.comm, "halo_weight": args.halo_weight},
+                   "comm": args.comm, "halo_weight": args.halo_weight,
+                   "domain": args.domain},
         "scenarios": {},
         # Modelled bytes vs overlap width for both comm paths (no runs
         # needed — the model depends only on the decomposition).
@@ -195,8 +225,8 @@ def main() -> None:
     for name in names:
         ndim = streams.get(name).ndim
         print(f"[streaming_bench] {name} ({ndim}D) ...", file=sys.stderr)
-        static = run_arm(name, rebalance=False, args=args)
-        dydd = run_arm(name, rebalance=True, args=args)
+        static, _ = run_arm(name, rebalance=False, args=args)
+        dydd, x_dydd = run_arm(name, rebalance=True, args=args)
         report["scenarios"][name] = {
             "ndim": ndim,
             "static": static,
@@ -208,20 +238,50 @@ def main() -> None:
                 static["imbalance_final"]
                 / max(dydd["imbalance_final"], 1e-12)),
         }
+        if args.compare_domains and ndim == 2:
+            # Shelf-vs-kdtree at equal p (pr*pc cells vs pr*pc leaves):
+            # final imbalance, migration volume, modelled comm bytes —
+            # the anisotropic-network comparison the k-d domain exists
+            # for (a shelf tiling wastes cells on empty strips).
+            compare_d = {}
+            for kind in ("shelf", "kdtree"):
+                if kind == args.domain:
+                    arm = dydd
+                else:
+                    print(f"[streaming_bench]   domain={kind} ...",
+                          file=sys.stderr)
+                    arm, _ = run_arm(name, rebalance=True, args=args,
+                                     domain_kind=kind)
+                compare_d[kind] = {
+                    "imbalance_final": arm["imbalance_final"],
+                    "imbalance_mean": float(
+                        np.mean(arm["imbalance_trajectory"])),
+                    "migrated_total": arm["migrated_total"],
+                    "repartitions": arm["repartitions"],
+                    "comm_bytes_per_cycle_mean": float(
+                        np.mean(arm["comm_bytes_per_cycle"])),
+                    "p": arm["domain"]["p"],
+                }
+            assert compare_d["shelf"]["p"] == compare_d["kdtree"]["p"]
+            compare_d["final_imbalance_ratio_shelf_over_kdtree"] = float(
+                compare_d["shelf"]["imbalance_final"]
+                / max(compare_d["kdtree"]["imbalance_final"], 1e-12))
+            report["scenarios"][name]["domain_compare"] = compare_d
         if args.compare_comm:
             # Allreduce-vs-neighbour on the same scenario: measured
             # wall-clock next to modelled per-cycle bytes.  The dydd arm
             # above already ran with args.comm — only the other path
             # needs a fresh run.
             compare = {}
+            analyses = {args.comm: x_dydd}
             for comm in ("allreduce", "neighbour"):
                 if comm == args.comm:
                     arm = dydd
                 else:
                     print(f"[streaming_bench]   comm={comm} ...",
                           file=sys.stderr)
-                    arm = run_arm(name, rebalance=True, args=args,
-                                  comm=comm)
+                    arm, analyses[comm] = run_arm(name, rebalance=True,
+                                                  args=args, comm=comm)
                 compare[comm] = {
                     "solve_time_mean_s": arm["solve_time_mean_s"],
                     "cycle_latency_steady_s": arm["cycle_latency_steady_s"],
@@ -232,6 +292,12 @@ def main() -> None:
                 compare["allreduce"]["comm_bytes_per_cycle_mean"]
                 / max(compare["neighbour"]["comm_bytes_per_cycle_mean"],
                       1e-12))
+            # The two comm paths iterate the identical update; their
+            # final analyses may differ only by collective reduction
+            # order (ULPs) — recorded so the CI artifact carries the
+            # parity evidence.
+            compare["analysis_max_abs_diff"] = float(np.max(np.abs(
+                analyses["allreduce"] - analyses["neighbour"])))
             report["scenarios"][name]["comm_compare"] = compare
 
     # Autotuned gram reduction tiles (chosen block_m + timed sweep per

@@ -9,7 +9,10 @@ subdomain to move independently with time").
 
 ``--ndim 1`` (default) drives an Interval1D domain; ``--ndim 2`` drives a
 ShelfTiling2D (the paper's Ω ⊂ R² setting) and prints the per-cell load
-table before/after each rebalance.
+table before/after each rebalance.  ``--ndim 2 --domain kdtree`` swaps
+the shelf for the adaptive k-d tree domain (pr*pc median-split leaves —
+the right choice for strongly anisotropic networks such as
+``satellite_track`` / ``river_gauges``).
 
   PYTHONPATH=src python examples/dydd_assimilation.py
   PYTHONPATH=src python examples/dydd_assimilation.py \
@@ -21,6 +24,9 @@ table before/after each rebalance.
   PYTHONPATH=src python examples/dydd_assimilation.py \
       --ndim 2 --pr 2 --pc 4 --overlap 1 --solver shardmap \
       --scenarios rotating_swarm    # sharded: one device per tiling cell
+  PYTHONPATH=src python examples/dydd_assimilation.py \
+      --ndim 2 --domain kdtree --pr 2 --pc 4 --m 300 --cycles 3 \
+      --scenarios satellite_track river_gauges  # anisotropic k-d domain
 """
 import argparse
 
@@ -41,6 +47,11 @@ def make_config(args) -> EngineConfig:
                   comm=args.comm, halo_weight=args.halo_weight)
     if args.ndim == 1:
         return EngineConfig(n=args.n, p=args.p, **common)
+    if args.domain == "kdtree":
+        # Equal p to the shelf at the same flags: pr*pc leaves.
+        return EngineConfig(ndim=2, domain_kind="kdtree",
+                            p=args.pr * args.pc, nx=args.nx, ny=args.ny,
+                            damping=args.damping, **common)
     return EngineConfig(ndim=2, nx=args.nx, ny=args.ny, pr=args.pr,
                         pc=args.pc, damping=args.damping, **common)
 
@@ -61,9 +72,14 @@ def run_scenario(name: str, args) -> None:
     cfg = make_config(args)
     eng = AssimilationEngine(cfg)
     dom = eng.journal.meta
-    shape = (f"p={dom['p']}" if args.ndim == 1
-             else f"{dom['pr']}x{dom['pc']} cells on a "
-                  f"{dom['nx']}x{dom['ny']} mesh")
+    if args.ndim == 1:
+        shape = f"p={dom['p']}"
+    elif dom["kind"] == "kdtree":
+        shape = (f"{dom['p']}-leaf k-d tree on a "
+                 f"{dom['nx']}x{dom['ny']} mesh")
+    else:
+        shape = (f"{dom['pr']}x{dom['pc']} cells on a "
+                 f"{dom['nx']}x{dom['ny']} mesh")
     solver = cfg.solver + (f" on mesh {dict(eng.mesh.shape)}"
                            if eng.mesh is not None else "")
     if cfg.solver == "shardmap":
@@ -97,7 +113,13 @@ def run_scenario(name: str, args) -> None:
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--ndim", type=int, default=1, choices=(1, 2),
-                    help="domain dimension: 1 = interval, 2 = shelf tiling")
+                    help="domain dimension: 1 = interval, 2 = shelf tiling "
+                    "or k-d tree (see --domain)")
+    ap.add_argument("--domain", default="shelf",
+                    choices=("shelf", "kdtree"),
+                    help="2D domain kind: shelf tiling (pr x pc cells) or "
+                    "adaptive k-d tree (pr*pc median-split leaves — for "
+                    "strongly anisotropic networks)")
     ap.add_argument("--n", type=int, default=512, help="1D state dimension")
     ap.add_argument("--p", type=int, default=8, help="1D subdomains")
     ap.add_argument("--nx", type=int, default=24, help="2D mesh width")

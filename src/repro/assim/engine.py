@@ -42,6 +42,7 @@ from repro.core import dd as dd_mod
 from repro.core import ddkf as ddkf_mod
 from repro.core import domain as domain_mod
 from repro.core import dydd as dydd_mod
+from repro.core import kdtree as kdtree_mod
 from repro.core import _compat as compat_mod
 from repro.assim import streams as streams_mod
 from repro.assim.metrics import CycleMetrics, Journal, imbalance_ratio
@@ -81,8 +82,15 @@ class EngineConfig:
     """
 
     n: int = 256                      # state dimension
-    p: int = 4                        # subdomains (= processors), 1D
+    p: int = 4                        # subdomains (= processors), 1D and
+                                      # kdtree (leaf count)
     ndim: int = 1                     # 1 = Interval1D, 2 = ShelfTiling2D
+    domain_kind: Optional[str] = None  # "interval" | "shelf" | "kdtree";
+                                      # None derives from ndim (1 ->
+                                      # interval, 2 -> shelf).  "kdtree"
+                                      # is a 2D adaptive k-d tree of p
+                                      # leaves over the nx x ny mesh
+                                      # (anisotropic networks)
     pr: int = 2                       # 2D: strip count
     pc: int = 2                       # 2D: cells per strip
     nx: Optional[int] = None          # 2D: mesh width (default: factor n)
@@ -110,24 +118,40 @@ class EngineConfig:
                                       # unweighted, the historic policy)
 
 
+def _resolve_mesh_shape(cfg: EngineConfig) -> tuple:
+    """(nx, ny) of the 2D raster mesh from the config (factor n if only
+    one or neither axis is given)."""
+    nx, ny = cfg.nx, cfg.ny
+    if nx is None and ny is None:
+        return domain_mod.factor_mesh(cfg.n)
+    if nx is None or ny is None:
+        # One axis given: the other must complete cfg.n exactly.
+        given = nx if nx is not None else ny
+        if given < 1 or cfg.n % given:
+            raise ValueError(
+                f"mesh axis {given} does not divide n={cfg.n}; give "
+                f"both nx and ny or a divisor of n")
+        return (given, cfg.n // given) if nx is not None \
+            else (cfg.n // given, given)
+    return nx, ny
+
+
 def _domain_from_config(cfg: EngineConfig) -> domain_mod.Domain:
-    if cfg.ndim == 1:
+    if cfg.ndim not in (1, 2):
+        raise ValueError(f"ndim must be 1 or 2 (got {cfg.ndim})")
+    kind = cfg.domain_kind
+    if kind is None:
+        kind = "interval" if cfg.ndim == 1 else "shelf"
+    if kind == "interval":
         return domain_mod.Interval1D(n=cfg.n, p=cfg.p)
-    if cfg.ndim == 2:
-        nx, ny = cfg.nx, cfg.ny
-        if nx is None and ny is None:
-            nx, ny = domain_mod.factor_mesh(cfg.n)
-        elif nx is None or ny is None:
-            # One axis given: the other must complete cfg.n exactly.
-            given = nx if nx is not None else ny
-            if given < 1 or cfg.n % given:
-                raise ValueError(
-                    f"mesh axis {given} does not divide n={cfg.n}; give "
-                    f"both nx and ny or a divisor of n")
-            nx, ny = (given, cfg.n // given) if nx is not None \
-                else (cfg.n // given, given)
+    if kind == "shelf":
+        nx, ny = _resolve_mesh_shape(cfg)
         return domain_mod.ShelfTiling2D(nx=nx, ny=ny, pr=cfg.pr, pc=cfg.pc)
-    raise ValueError(f"ndim must be 1 or 2 (got {cfg.ndim})")
+    if kind == "kdtree":
+        nx, ny = _resolve_mesh_shape(cfg)
+        return kdtree_mod.KDTreeDomain(nx=nx, ny=ny, p=cfg.p)
+    raise ValueError(f"domain_kind must be 'interval', 'shelf' or "
+                     f"'kdtree' (got {cfg.domain_kind!r})")
 
 
 @dataclasses.dataclass
@@ -153,6 +177,9 @@ class _Prepared:
                                         # the cycle's decomposition
     comm_bytes_per_cycle: float
     halo_fraction: float
+    rebalance_suppressed: bool = False  # trigger armed but suppressed
+                                        # (previous rebalance already
+                                        # left these exact loads)
 
 
 class AssimilationEngine:
@@ -211,6 +238,9 @@ class AssimilationEngine:
         self._rng = np.random.default_rng(config.seed)
         self._truth = self._rng.normal(size=self.n)
         self._streak = 0  # consecutive over-threshold cycles
+        self._last_rebalance_loads: Optional[np.ndarray] = None
+        self._suppressed = False  # this cycle's trigger was suppressed
+        self._dec_cache: Optional[dd_mod.Decomposition] = None
         self._t_last = time.perf_counter()
 
     # -- mesh resolution for the sharded solver ----------------------------
@@ -259,23 +289,54 @@ class AssimilationEngine:
     # -- rebalance trigger policy ------------------------------------------
 
     def _should_rebalance(self, loads: np.ndarray) -> bool:
+        self._suppressed = False
         if not self.cfg.rebalance:
             self._streak = 0
             return False
+        fire = False
         if (loads == 0).any():
             # Empty subdomain: the DD step cannot wait out the hysteresis.
             self._streak = 0
-            return True
-        if imbalance_ratio(loads) > self.cfg.imbalance_threshold:
-            self._streak += 1
+            fire = True
         else:
-            self._streak = 0
-        if self._streak >= self.cfg.hysteresis:
-            self._streak = 0
-            return True
-        return False
+            if imbalance_ratio(loads) > self.cfg.imbalance_threshold:
+                self._streak += 1
+            else:
+                self._streak = 0
+            if self._streak >= self.cfg.hysteresis:
+                self._streak = 0
+                fire = True
+        if fire and self._last_rebalance_loads is not None \
+                and np.array_equal(loads, self._last_rebalance_loads):
+            # The last rebalance already left exactly these loads:
+            # re-firing would schedule the same targets again, so a
+            # genuinely unpopulatable subdomain (e.g. fewer observations
+            # than subdomains) would otherwise re-trigger the empty-DD
+            # step every cycle — suppress, and journal the suppression.
+            # On Interval1D this is exact (migration realizes targets
+            # from loads alone); on position-dependent domains (kdtree
+            # median cuts) a stream whose positions moved while the
+            # count vector stayed identical keeps the previous cuts one
+            # extra cycle — the deliberate trade against trigger thrash
+            # (any count change lifts the suppression).
+            self._suppressed = True
+            return False
+        return fire
 
     # -- host-side cycle preparation (runs on the worker thread) -----------
+
+    def _current_dec(self) -> dd_mod.Decomposition:
+        """The decomposition of the *current* boundaries, cached across
+        cycles and invalidated only by a rebalance (the engine is the
+        sole mutator of its domain's boundary state).  Reusing one
+        Decomposition object is what lets its ``cached_property`` halo
+        schedule actually hit — the O(n·mult²) edge discovery and the
+        colouring/slot-map build would otherwise re-run every cycle and
+        be charged to ``pack_time``."""
+        if self._dec_cache is None:
+            self._dec_cache = self.domain.decomposition(
+                overlap=self.cfg.overlap)
+        return self._dec_cache
 
     def _halo_offsets(self) -> np.ndarray | None:
         """Per-subdomain halo-cost offsets for the overlap-aware DyDD
@@ -284,8 +345,7 @@ class AssimilationEngine:
         off or there is no overlap to weigh."""
         if self.cfg.halo_weight <= 0 or self.cfg.overlap <= 0:
             return None
-        dec = self.domain.decomposition(overlap=self.cfg.overlap)
-        return self.cfg.halo_weight * dec.halo_sizes
+        return self.cfg.halo_weight * self._current_dec().halo_sizes
 
     def _prepare(self, cycle: int, obs: np.ndarray) -> _Prepared:
         t0 = time.perf_counter()
@@ -301,9 +361,13 @@ class AssimilationEngine:
             repartitioned = True
             migrated = info.migrated
             rounds = info.rounds
+            self._dec_cache = None   # boundaries moved
+        suppressed = self._suppressed
         loads = self.domain.counts(obs)
+        if repartitioned:
+            self._last_rebalance_loads = np.asarray(loads).copy()
 
-        dec = self.domain.decomposition(overlap=cfg.overlap)
+        dec = self._current_dec()
         # Weighted loads: what the overlap-aware schedule balances (the
         # plain counts when halo_weight is 0).
         loads_weighted = loads + np.rint(
@@ -347,7 +411,8 @@ class AssimilationEngine:
                          pack_time=time.perf_counter() - t0,
                          halo=halo,
                          comm_bytes_per_cycle=float(comm_bytes),
-                         halo_fraction=dec.halo_fraction)
+                         halo_fraction=dec.halo_fraction,
+                         rebalance_suppressed=suppressed)
 
     # -- device-side solve (main thread) -----------------------------------
 
@@ -457,4 +522,5 @@ class AssimilationEngine:
             error_vs_direct=err,
             comm_bytes_per_cycle=prep.comm_bytes_per_cycle,
             halo_fraction=prep.halo_fraction,
-            loads_weighted=[int(v) for v in prep.loads_weighted]))
+            loads_weighted=[int(v) for v in prep.loads_weighted],
+            rebalance_suppressed=prep.rebalance_suppressed))

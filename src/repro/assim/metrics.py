@@ -55,6 +55,13 @@ class CycleMetrics:
                                 # obs loads + halo-cost offsets — what the
                                 # overlap-aware DyDD schedule balances
                                 # (== loads when halo_weight is 0)
+    rebalance_suppressed: bool = False
+                                # a rebalance trigger armed this cycle but
+                                # was suppressed because the previous
+                                # cycle's rebalance already left exactly
+                                # these loads (an unpopulatable subdomain
+                                # would otherwise re-fire the DD step
+                                # every cycle)
 
     def to_dict(self) -> dict:
         d = dataclasses.asdict(self)
@@ -111,6 +118,8 @@ class Journal:
         return {
             "cycles": len(self.records),
             "repartitions": self.repartition_count,
+            "repartitions_suppressed": int(sum(
+                r.rebalance_suppressed for r in self.records)),
             "migrated_total": self.migrated_total,
             "imbalance_max": float(imb.max()),
             "imbalance_mean": float(imb.mean()),

@@ -251,6 +251,46 @@ def coastal_band(m, cycles, seed, amplitude=0.2, width=0.05):
         yield _finalize_2d(np.stack([x, y], axis=1))
 
 
+@register("satellite_track", ndim=2)
+def satellite_track(m, cycles, seed, tracks=3, stations=8, width=0.02):
+    """Polar-orbit ground tracks: all mass rides a few thin diagonal
+    swaths whose phase precesses each cycle, sampled at a fixed set of
+    along-track stations — so the x coordinates are *quantized* (heavy
+    ties) and the network is strongly anisotropic.  A shelf tiling
+    wastes cells on the empty area between swaths and cannot split a
+    heavy station column except at a global strip boundary; the k-d
+    domain splits it locally along y."""
+    rng = np.random.default_rng(seed)
+    xg = (np.arange(stations) + 0.5) / stations
+    for c in range(cycles):
+        phase = 0.13 * c
+        k = rng.integers(0, tracks, m)
+        weights = rng.dirichlet(0.5 * np.ones(stations))
+        x = xg[rng.choice(stations, size=m, p=weights)]
+        y = np.mod(x + k / tracks + phase, 1.0) \
+            + width * rng.normal(size=m)
+        yield _finalize_2d(np.stack([x, y], axis=1))
+
+
+@register("river_gauges", ndim=2)
+def river_gauges(m, cycles, seed, gauges=10, width=0.015):
+    """Stream gauges on a meandering river: observations sit at a fixed
+    set of gauge stations (tied x) along a curved band y = f(x), and a
+    flood pulse travels downstream through the run, concentrating the
+    sampling mass gauge by gauge — a curved, strongly anisotropic
+    network whose hot spot moves every cycle."""
+    rng = np.random.default_rng(seed)
+    xg = np.sort(rng.uniform(0.05, 0.95, gauges))
+    for c in range(cycles):
+        t = c / max(cycles - 1, 1)
+        pulse = 0.1 + 0.8 * t
+        w = np.exp(-((xg - pulse) / 0.25) ** 2) + 0.15
+        x = xg[rng.choice(gauges, size=m, p=w / w.sum())]
+        y = 0.5 + 0.3 * np.sin(2.2 * np.pi * x + 0.4) \
+            + width * rng.normal(size=m)
+        yield _finalize_2d(np.stack([x, y], axis=1))
+
+
 @register("grid_dropout", ndim=2)
 def grid_dropout(m, cycles, seed, pr=2, pc=2):
     """A uniform 2D sensor network that loses a growing rectangle of

@@ -1,4 +1,4 @@
 """Core paper library: CLS, Kalman Filter, DD-CLS, DyDD (1D/2D), DD-KF,
-and the dimension-agnostic Domain layer."""
+and the dimension-agnostic Domain layer (interval / shelf / k-d tree)."""
 from repro.core import (  # noqa: F401
-    balance, cls, dd, ddkf, domain, dydd, dydd2d, kalman)
+    balance, cls, dd, ddkf, domain, dydd, dydd2d, kalman, kdtree)

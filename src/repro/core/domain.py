@@ -40,6 +40,22 @@ from repro.core import dydd as dydd_mod
 from repro.core import dydd2d as dydd2d_mod
 
 
+def raster_positions(obs: np.ndarray, ny: int) -> np.ndarray:
+    """(m,) row-continuous raster coordinate of 2D observations on an
+    ny-row mesh: the observation keeps its continuous x within the mesh
+    row its y falls in, so column ``row * nx + floor(x * nx)`` is the
+    nearest mesh point.  The result is clamped strictly below the next
+    row's start: an ``x == 1.0`` boundary observation used to alias to
+    ``(row + 1) / ny`` — the *next* raster row's first column — and even
+    a clamped in-row coordinate can round up across the row seam in
+    float arithmetic (``(2 + (1 - eps)) / 4 == 0.75``).  With ``ny == 1``
+    this is exactly the identity on in-range x (the 1D convention)."""
+    obs = np.asarray(obs, np.float64)
+    rows = np.clip((obs[:, 1] * ny).astype(np.int64), 0, ny - 1)
+    pos = (rows + np.clip(obs[:, 0], 0.0, 1.0)) / ny
+    return np.minimum(pos, np.nextafter((rows + 1.0) / ny, 0.0))
+
+
 @dataclasses.dataclass(frozen=True)
 class RebalanceInfo:
     """What a DyDD run moved: observation migration volume and rounds."""
@@ -130,13 +146,20 @@ class Interval1D:
     ndim = 1
 
     def __init__(self, n: int, p: int,
-                 boundaries: np.ndarray | None = None):
+                 boundaries: np.ndarray | None = None,
+                 tie_ranks: np.ndarray | None = None):
         self._n = int(n)
         self._p = int(p)
         self.boundaries = (np.linspace(0.0, 1.0, p + 1)
                            if boundaries is None
                            else np.asarray(boundaries, np.float64).copy())
         assert self.boundaries.shape == (p + 1,)
+        # Rank split of observations tied with an interior boundary (see
+        # dydd._counts) — zero means the historic all-right tie rule.
+        self.tie_ranks = (np.zeros((max(p - 1, 0),), np.int64)
+                          if tie_ranks is None
+                          else np.asarray(tie_ranks, np.int64).copy())
+        assert self.tie_ranks.shape == (max(p - 1, 0),)
 
     @property
     def n(self) -> int:
@@ -148,14 +171,16 @@ class Interval1D:
 
     def counts(self, obs: np.ndarray) -> np.ndarray:
         return dydd_mod._counts(np.asarray(obs, np.float64),
-                                self.boundaries)
+                                self.boundaries, self.tie_ranks)
 
     def rebalance(self, obs: np.ndarray,
                   cost_offsets: np.ndarray | None = None) -> RebalanceInfo:
         res = dydd_mod.dydd_1d(np.asarray(obs, np.float64), self._p,
                                boundaries=self.boundaries.copy(),
-                               cost_offsets=cost_offsets)
+                               cost_offsets=cost_offsets,
+                               tie_ranks=self.tie_ranks.copy())
         self.boundaries = res.boundaries
+        self.tie_ranks = res.tie_ranks
         return RebalanceInfo(migrated=res.total_movement, rounds=res.rounds)
 
     def decomposition(self, overlap: int = 0) -> dd_mod.Decomposition:
@@ -263,15 +288,7 @@ class ShelfTiling2D:
         return ("row", "col"), (self.pr, self.pc)
 
     def obs_positions(self, obs: np.ndarray) -> np.ndarray:
-        """Row-continuous raster coordinate: the observation keeps its
-        continuous x within the mesh row its y falls in, so column
-        ``row * nx + floor(x * nx)`` is the nearest mesh point.  With
-        ``ny == 1`` this is exactly the identity on x (the 1D engine's
-        convention) — division by ny == 1 is exact."""
-        obs = np.asarray(obs, np.float64)
-        rows = np.clip((obs[:, 1] * self.ny).astype(np.int64), 0,
-                       self.ny - 1)
-        return (rows + obs[:, 0]) / self.ny
+        return raster_positions(obs, self.ny)
 
     @property
     def row_size(self) -> int | None:

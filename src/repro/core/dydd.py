@@ -283,30 +283,70 @@ class DyDDResult:
     loads_repartitioned: np.ndarray  # l_r (after DD step; = l_in if no empty)
     loads_final: np.ndarray         # l_fin
     rounds: int
-    total_movement: int
+    total_movement: int             # observations whose owner changed
     repartitioned: bool
+    tie_ranks: np.ndarray | None = None  # (p-1,) rank split of boundary ties
+    scheduled_movement: int = 0     # sum |delta| over scheduling rounds
 
     @property
     def efficiency(self) -> float:
         return balance_ratio(self.loads_final)
 
 
-def _counts(obs: np.ndarray, boundaries: np.ndarray) -> np.ndarray:
+def _counts(obs: np.ndarray, boundaries: np.ndarray,
+            tie_ranks: np.ndarray | None = None,
+            assume_sorted: bool = False) -> np.ndarray:
+    """Per-subdomain observation counts under a rank-split tie rule.
+
+    ``tie_ranks[k]`` is the number of observations *exactly equal to*
+    interior boundary ``boundaries[k+1]`` that count to its left side;
+    ``None`` means all-zero ranks, which reproduces the historic
+    ``searchsorted(side="right")`` counting bit for bit (every tied
+    observation on the right side).  Counting is cumulative — the number
+    of observations in subdomains ``0..k`` is the number strictly below
+    boundary k+1 plus that boundary's tie rank — so equal-valued interior
+    boundaries (collapsed by the DD step) and out-of-order guards need no
+    special casing.  ``assume_sorted`` skips the sort for hot-loop
+    callers that hold ``obs`` ascending already."""
     p = len(boundaries) - 1
-    owner = np.clip(np.searchsorted(boundaries, obs, side="right") - 1, 0,
-                    p - 1)
-    return np.bincount(owner, minlength=p).astype(np.int64)
+    obs_sorted = np.asarray(obs, np.float64)
+    if not assume_sorted:
+        obs_sorted = np.sort(obs_sorted)
+    interior = np.asarray(boundaries[1:p], np.float64)
+    cum = np.searchsorted(obs_sorted, interior, side="left")
+    if tie_ranks is not None:
+        eq = np.searchsorted(obs_sorted, interior, side="right") - cum
+        cum = cum + np.clip(np.asarray(tie_ranks, np.int64), 0, eq)
+    cum = np.concatenate([[0], np.maximum.accumulate(cum),
+                          [obs_sorted.size]])
+    return np.diff(cum).astype(np.int64)
 
 
-def repartition_empty_1d(obs: np.ndarray,
-                         boundaries: np.ndarray) -> np.ndarray:
+def _rank_owners(obs: np.ndarray, boundaries: np.ndarray,
+                 tie_ranks: np.ndarray | None = None,
+                 assume_sorted: bool = False) -> np.ndarray:
+    """(m,) owner of each *sorted-rank* observation slot — tied
+    observations are interchangeable, so the per-rank assignment is the
+    minimal-movement matching between two decompositions."""
+    counts = _counts(obs, boundaries, tie_ranks,
+                     assume_sorted=assume_sorted)
+    return np.repeat(np.arange(counts.shape[0]), counts)
+
+
+def _repartition_empty(obs: np.ndarray, boundaries: np.ndarray,
+                       tie_ranks: np.ndarray | None):
     """DD step (paper Fig. 1): while some subdomain is empty, split the
-    *adjacent* subdomain with maximum load at its geometric midpoint and give
-    the empty subdomain the half adjacent to it."""
+    *adjacent* subdomain with maximum load at its geometric midpoint and
+    give the empty subdomain the half adjacent to it.  Boundaries that
+    move reset their tie rank (a fresh geometric cut owns no tie split);
+    unmoved boundaries keep theirs.  Returns (boundaries, tie_ranks)."""
+    obs = np.sort(np.asarray(obs, np.float64))
     boundaries = boundaries.copy()
     p = len(boundaries) - 1
+    ranks = (np.zeros((max(p - 1, 0),), np.int64) if tie_ranks is None
+             else np.asarray(tie_ranks, np.int64).copy())
     for _ in range(4 * p):  # termination guard
-        counts = _counts(obs, boundaries)
+        counts = _counts(obs, boundaries, ranks, assume_sorted=True)
         empties = np.where(counts == 0)[0]
         if empties.size == 0:
             break
@@ -321,37 +361,66 @@ def repartition_empty_1d(obs: np.ndarray,
             boundaries[i] = mid     # i's left edge moves down to mid
             # intermediate boundaries between m+1..i collapse onto mid
             boundaries[m + 1:i] = mid
+            ranks[m:i] = 0
         else:           # donate the left half of the neighbour
             boundaries[i + 1] = mid
             boundaries[i + 2:m + 1] = mid
-    return boundaries
+            ranks[i:m] = 0
+    return boundaries, ranks
+
+
+def repartition_empty_1d(obs: np.ndarray,
+                         boundaries: np.ndarray) -> np.ndarray:
+    """Historic DD-step entry point: boundaries only, all-right tie rule."""
+    return _repartition_empty(obs, boundaries, None)[0]
 
 
 def migrate_1d(obs: np.ndarray, boundaries: np.ndarray,
-               target_counts: np.ndarray) -> np.ndarray:
+               target_counts: np.ndarray, assume_sorted: bool = False):
     """Migration step: shift interior boundaries left-to-right so subdomain i
     contains exactly target_counts[i] observations (paper Fig. 3).
 
     Works for chain-adjacent (1D) decompositions: boundary k is placed
     between the cumsum(target)[k]-th and +1-th order statistic of obs.
+    When those order statistics tie, no geometric boundary can realize
+    the cut — the boundary sits *on* the tied value and the returned
+    ``tie_ranks[k]`` records how many of the tied observations belong to
+    its left (an index-based rank split; see :func:`_counts`), so the
+    scheduled targets are realized exactly instead of dumping the whole
+    tie group on one side.
+
+    Returns ``(boundaries, tie_ranks)``.
     """
-    obs_sorted = np.sort(obs)
+    obs_sorted = np.asarray(obs, np.float64)
+    if not assume_sorted:
+        obs_sorted = np.sort(obs_sorted)
     m = obs_sorted.shape[0]
-    csum = np.cumsum(target_counts)[:-1]
+    p = len(boundaries) - 1
+    csum = np.clip(np.cumsum(target_counts)[:-1], 0, m).astype(np.int64)
     new = boundaries.copy()
     for k, c in enumerate(csum):
-        c = int(np.clip(c, 0, m))
+        c = int(c)
         if c == 0:
             new[k + 1] = boundaries[0]
         elif c == m:
             new[k + 1] = boundaries[-1]
-        else:
+        elif obs_sorted[c - 1] < obs_sorted[c]:
             new[k + 1] = 0.5 * (obs_sorted[c - 1] + obs_sorted[c])
+        else:
+            new[k + 1] = obs_sorted[c]   # tied cut: boundary on the value
     # Keep edges monotone.
     for k in range(1, len(new)):
         new[k] = max(new[k], new[k - 1])
     new[-1] = boundaries[-1]
-    return new
+    # Rank split: place c - #(obs < boundary) of the boundary-tied
+    # observations on the left so the cumulative count at boundary k+1 is
+    # exactly csum[k].  (The midpoint of two *distinct* order statistics
+    # can still round onto one of them in float arithmetic — the uniform
+    # formula covers that too.)
+    lt = np.searchsorted(obs_sorted, new[1:p], side="left")
+    eq = np.searchsorted(obs_sorted, new[1:p], side="right") - lt
+    ranks = np.clip(csum - lt, 0, eq).astype(np.int64)
+    return new, ranks
 
 
 def _offset_targets(work_fin: np.ndarray, offsets: np.ndarray,
@@ -380,7 +449,8 @@ def _offset_targets(work_fin: np.ndarray, offsets: np.ndarray,
 def dydd_1d(obs: np.ndarray, p: int,
             boundaries: np.ndarray | None = None,
             max_rounds: int = 64,
-            cost_offsets: np.ndarray | None = None) -> DyDDResult:
+            cost_offsets: np.ndarray | None = None,
+            tie_ranks: np.ndarray | None = None) -> DyDDResult:
     """Full DyDD on a 1D domain [0,1] with observation locations ``obs``.
 
     The processor graph of a 1D chain decomposition is the path graph.
@@ -393,15 +463,27 @@ def dydd_1d(obs: np.ndarray, p: int,
     that carry wide Schwarz halos are scheduled as busier and receive
     fewer observations.  ``None`` (default) reproduces the unweighted
     behaviour bit-for-bit.
+
+    ``tie_ranks`` (p-1,) carries the incoming boundaries' tie split (see
+    :func:`_counts`) for streams with quantized/tied coordinates; the
+    result's ``tie_ranks`` must be carried alongside ``boundaries`` by
+    stateful callers (``domain.Interval1D`` does).  ``total_movement`` is
+    the *true* migration volume — the number of observations whose owner
+    changed between the incoming and final decomposition — while the
+    diffusion schedule's summed |delta| is in ``scheduled_movement``.
     """
-    obs = np.asarray(obs, dtype=np.float64)
+    # Everything below is order-invariant, so sort once up front (the
+    # counting/migration/ownership helpers would each re-sort otherwise
+    # — ~4p redundant O(m log m) sorts per rebalance in the streaming
+    # hot path).
+    obs = np.sort(np.asarray(obs, dtype=np.float64))
     if boundaries is None:
         boundaries = np.linspace(0.0, 1.0, p + 1)
-    l_in = _counts(obs, boundaries)
+    l_in = _counts(obs, boundaries, tie_ranks, assume_sorted=True)
 
     # 1) DD step.
-    b1 = repartition_empty_1d(obs, boundaries)
-    l_r = _counts(obs, b1)
+    b1, t1 = _repartition_empty(obs, boundaries, tie_ranks)
+    l_r = _counts(obs, b1, t1, assume_sorted=True)
     repartitioned = not np.array_equal(b1, boundaries)
 
     # 2) Scheduling (iterated) — on obs + halo-cost work when weighted.
@@ -418,17 +500,37 @@ def dydd_1d(obs: np.ndarray, p: int,
                                       max_rounds=max_rounds)
         l_fin = _offset_targets(work_fin, off, int(l_r.sum()))
 
-    # 3) Migration: realize l_fin geometrically.
-    b2 = migrate_1d(obs, b1, l_fin)
+    # 3) Migration: realize l_fin geometrically + rank-split boundary ties.
+    b2, t2 = migrate_1d(obs, b1, l_fin, assume_sorted=True)
 
-    # 4) Update: recount (exact by construction of migrate_1d).
-    l_check = _counts(obs, b2)
+    # 4) Update: recount.  Exact by construction of migrate_1d — the rank
+    # split realizes every scheduled cut even inside a tie group —
+    # *provided* every observation lies within the boundary span.  An
+    # out-of-span observation is pinned to an end subdomain by counting
+    # but invisible to the cut placement, so a zero end target cannot be
+    # realized; those callers get the honest recount (the pre-fix
+    # behaviour) instead of a crash.
+    l_check = _counts(obs, b2, t2, assume_sorted=True)
+    if obs.size == 0 or (obs[0] >= boundaries[0]
+                         and obs[-1] <= boundaries[-1]):
+        assert np.array_equal(l_check, l_fin), \
+            f"migration failed to realize the scheduled targets: " \
+            f"{l_check.tolist()} != {l_fin.tolist()}"
+
+    # True migration volume: observations whose owner changed between the
+    # incoming and final decomposition (tied observations matched by rank
+    # — the minimal reassignment).
+    moved = int((_rank_owners(obs, boundaries, tie_ranks,
+                              assume_sorted=True)
+                 != _rank_owners(obs, b2, t2, assume_sorted=True)).sum())
     return DyDDResult(boundaries=b2, loads_initial=l_in,
                       loads_repartitioned=l_r, loads_final=l_check,
                       rounds=len(schedules),
-                      total_movement=sum(s.total_movement
-                                         for s in schedules),
-                      repartitioned=repartitioned)
+                      total_movement=moved,
+                      repartitioned=repartitioned,
+                      tie_ranks=t2,
+                      scheduled_movement=sum(s.total_movement
+                                             for s in schedules))
 
 
 def dydd_graph(loads: np.ndarray, edges: Sequence[Edge],

@@ -171,6 +171,65 @@ def test_hysteresis_defers_repartition():
     assert fired and fired[0] == 2, fired
 
 
+def test_no_thrash_on_static_tied_clustered_stream():
+    """ISSUE 5 regression: a static clustered stream with heavily tied
+    coordinates used to repartition every cycle (the tie bug left an
+    'empty' subdomain that re-fired the DD step).  With the rank-split
+    migration the first repartition balances exactly; no further cycle
+    may fire."""
+    def clustered(m, cycles, seed):
+        obs = np.sort(np.concatenate([np.full(3 * m // 4, 0.1),
+                                      np.full(m - 3 * m // 4, 0.9)]))
+        for _ in range(cycles):
+            yield obs
+
+    eng = AssimilationEngine(small_config(track_reference=False))
+    journal = eng.run(clustered(160, 6, seed=0))
+    assert journal.records[0].repartitioned
+    assert journal.repartition_count == 1
+    assert journal.records[0].loads == [40, 40, 40, 40]
+    for r in journal.records[1:]:
+        assert not r.repartitioned
+        assert not r.rebalance_suppressed  # balanced, trigger never arms
+
+
+def test_unpopulatable_empty_subdomain_suppressed_and_journalled():
+    """Fewer observations than subdomains: the empty trigger fires once,
+    the rebalance cannot populate every subdomain, and every later cycle
+    of the static stream suppresses the re-fire (journalled) instead of
+    thrashing the DD step."""
+    def tiny(m, cycles, seed):
+        for _ in range(cycles):
+            yield np.array([0.5, 0.5])
+
+    eng = AssimilationEngine(small_config(track_reference=False,
+                                          double_buffer=False))
+    journal = eng.run(tiny(2, 5, seed=0))
+    assert journal.records[0].repartitioned
+    assert journal.repartition_count == 1
+    for r in journal.records[1:]:
+        assert r.rebalance_suppressed and not r.repartitioned
+    assert journal.summary()["repartitions_suppressed"] == 4
+    d = json.loads(journal.to_json())
+    assert d["records"][1]["rebalance_suppressed"] is True
+
+
+def test_suppression_lifts_when_the_stream_moves():
+    """Suppression keys on exact load equality: once the stream shifts
+    the counts, the trigger fires again."""
+    def shifting(m, cycles, seed):
+        yield np.array([0.5, 0.5])
+        yield np.array([0.5, 0.5])
+        yield np.array([0.05, 0.06])   # different loads -> re-fire
+
+    eng = AssimilationEngine(small_config(track_reference=False,
+                                          double_buffer=False))
+    journal = eng.run(shifting(2, 3, seed=0))
+    fired = [r.cycle for r in journal.records if r.repartitioned]
+    assert fired[0] == 0 and len(fired) >= 2 and 2 in fired
+    assert journal.records[1].rebalance_suppressed
+
+
 def test_static_mode_never_repartitions():
     eng = AssimilationEngine(small_config(rebalance=False,
                                           track_reference=False))
@@ -183,17 +242,25 @@ def test_static_mode_never_repartitions():
 # 2D domain: ShelfTiling2D engine runs, rebalance wins, degenerate parity.
 # ---------------------------------------------------------------------------
 
+# Station-network scenarios with quantized (tied) coordinates: a shelf
+# tiling cannot cut inside a tie group, so its post-rebalance imbalance
+# carries a tie-group floor above the trigger threshold (the gap the
+# KDTreeDomain closes — see test_kdtree.py).
+TIED_2D = frozenset({"satellite_track", "river_gauges"})
+
+
 @pytest.mark.parametrize("name", streams.available(ndim=2))
 def test_engine_runs_2d_scenario_and_matches_one_shot(name):
     eng = AssimilationEngine(small_config_2d())
     journal = eng.run_scenario(name, m=160, cycles=4, seed=0)
     assert len(journal) == 4
     assert journal.meta["ndim"] == 2
+    bound = 2.5 if name in TIED_2D else THRESHOLD
     for r in journal.records:
         assert r.error_vs_direct < 1e-8, (name, r.cycle, r.error_vs_direct)
         assert sum(r.loads) == 160
         if r.repartitioned:
-            assert r.imbalance <= THRESHOLD, (name, r.cycle, r.loads)
+            assert r.imbalance <= bound, (name, r.cycle, r.loads)
     assert eng.analysis is not None and eng.analysis.shape == (96,)
 
 
@@ -300,6 +367,29 @@ def test_explicit_domain_overrides_config():
     assert eng.domain is dom
     assert eng.n == 64 and eng.p == 4
     assert eng.journal.meta["kind"] == "shelf2d"
+
+
+def test_domain_kind_kdtree_config():
+    """domain_kind='kdtree' builds a p-leaf KDTreeDomain over the nx x ny
+    mesh and runs 2D scenarios end to end."""
+    cfg = EngineConfig(ndim=2, domain_kind="kdtree", p=4, nx=12, ny=8,
+                      iters=40, track_reference=False)
+    eng = AssimilationEngine(cfg)
+    assert eng.journal.meta["kind"] == "kdtree"
+    assert eng.p == 4 and eng.n == 96
+    journal = eng.run_scenario("satellite_track", m=80, cycles=2, seed=0)
+    assert len(journal) == 2
+    for r in journal.records:
+        assert sum(r.loads) == 80
+    # a 1D scenario is rejected like any other 2D domain
+    with pytest.raises(ValueError, match="1D"):
+        AssimilationEngine(cfg).run_scenario("drifting_swarm", m=40,
+                                             cycles=2)
+
+
+def test_unknown_domain_kind_raises():
+    with pytest.raises(ValueError, match="domain_kind"):
+        AssimilationEngine(EngineConfig(domain_kind="voronoi"))
 
 
 # ---------------------------------------------------------------------------

@@ -117,6 +117,52 @@ print("OK")
 """
 
 
+SCRIPT_KDTREE = r"""
+import jax
+jax.config.update("jax_enable_x64", True)
+import numpy as np, jax.numpy as jnp
+from repro.core import cls, ddkf, kdtree, _compat
+from repro.assim import streams, AssimilationEngine, EngineConfig
+
+# Irregular-graph halo exchange: a rebalanced 8-leaf k-d tree's face
+# adjacency is NOT a grid, so the coloured ppermute schedule runs between
+# arbitrary device pairs of the flat ("sub",) mesh.
+dom = kdtree.KDTreeDomain(nx=16, ny=8, p=8)
+obs2 = next(iter(streams.make_stream("satellite_track", 400, 1, seed=3)))
+dom.rebalance(obs2)
+dec = dom.decomposition(overlap=1)
+he = dec.halo_exchange
+assert len(he.edges) > 7, he.edges            # more than a chain
+prob = cls.local_problem(jax.random.PRNGKey(0), dom.n,
+                         np.sort(dom.obs_positions(obs2)))
+packed = ddkf.pack(prob, dec)
+mesh = _compat.make_device_mesh((8,), ("sub",))
+x_a = ddkf.solve_shardmap(packed, mesh, axis="sub", iters=200, damping=0.7)
+x_n = ddkf.solve_shardmap(packed, mesh, axis="sub", iters=200, damping=0.7,
+                          comm="neighbour", halo=he)
+d = float(np.abs(np.asarray(x_a) - np.asarray(x_n)).max())
+assert d < 1e-13, d
+err = float(jnp.linalg.norm(x_n - cls.solve(prob)))
+assert err < 1e-9, err
+# engine end to end on the leaf graph, both comm paths + vmapped parity
+kw = dict(ndim=2, domain_kind="kdtree", p=8, nx=16, ny=8, iters=200,
+          damping=0.7, overlap=1, imbalance_threshold=1.5)
+js = AssimilationEngine(EngineConfig(solver="shardmap", **kw)).run_scenario(
+    "satellite_track", m=160, cycles=2, seed=0)
+jn = AssimilationEngine(EngineConfig(solver="shardmap", comm="neighbour",
+                                     **kw)).run_scenario(
+    "satellite_track", m=160, cycles=2, seed=0)
+jv = AssimilationEngine(EngineConfig(solver="vmapped", **kw)).run_scenario(
+    "satellite_track", m=160, cycles=2, seed=0)
+for a, b, c in zip(js.records, jn.records, jv.records):
+    assert a.loads == b.loads == c.loads
+    assert a.repartitioned == b.repartitioned == c.repartitioned
+    # neighbour path journals strictly less modelled traffic
+    assert b.comm_bytes_per_cycle < a.comm_bytes_per_cycle
+print("OK", d, err)
+"""
+
+
 def _run_forced_8dev(script: str):
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -145,6 +191,15 @@ def test_engine_shardmap_journal_matches_vmapped():
     """AssimilationEngine with solver='shardmap' auto-builds the pr x pc
     mesh and journals the same loads/repartitions as the vmapped run."""
     _run_forced_8dev(SCRIPT_ENGINE)
+
+
+@pytest.mark.slow
+def test_kdtree_shardmap_irregular_graph_8_devices():
+    """KDTreeDomain end to end on a forced 8-device mesh: the leaf
+    face-adjacency graph is irregular (first real exercise of the
+    graph-general halo machinery beyond chains and grids), and the
+    neighbour-only ppermute exchange matches allreduce to ULPs."""
+    _run_forced_8dev(SCRIPT_KDTREE)
 
 
 # ---------------------------------------------------------------------------

@@ -138,6 +138,66 @@ def test_dydd_1d_three_empty_subdomains():
     assert res.efficiency > 0.95
 
 
+def test_dydd_1d_tied_coordinates_realize_targets():
+    """The ISSUE 5 repro: six observations at 0.1 and two at 0.9 under
+    p=2 must realize the scheduled [4, 4] — not dump the whole tie group
+    on one side ([0, 8]).  The boundary sits on the tied value and the
+    rank split assigns four of the ties to the left subdomain."""
+    res = dydd.dydd_1d(np.array([0.1] * 6 + [0.9] * 2), 2)
+    np.testing.assert_array_equal(res.loads_final, [4, 4])
+    np.testing.assert_array_equal(res.tie_ranks, [4])
+    assert res.boundaries[1] == 0.1
+    # True movement: [6, 2] (the initial geometric counts) -> [4, 4]
+    # moves exactly two observations.
+    assert res.total_movement == 2
+
+
+def test_dydd_1d_all_identical_coordinates():
+    """Every observation at the same point: rank splits still realize a
+    perfect balance (the degenerate tie group spans all cuts)."""
+    res = dydd.dydd_1d(np.full(12, 0.5), 4)
+    np.testing.assert_array_equal(res.loads_final, [3, 3, 3, 3])
+    assert res.efficiency == 1.0
+
+
+def test_counts_zero_ranks_match_legacy_side_right():
+    """tie_ranks=None / all-zero reproduces the historic
+    searchsorted(side='right') counting bit for bit, including
+    observations exactly on a boundary."""
+    obs = np.array([0.0, 0.25, 0.25, 0.3, 0.5, 0.999])
+    b = np.array([0.0, 0.25, 0.5, 1.0])
+    legacy = np.bincount(
+        np.clip(np.searchsorted(b, obs, side="right") - 1, 0, 2),
+        minlength=3)
+    np.testing.assert_array_equal(dydd._counts(obs, b), legacy)
+    np.testing.assert_array_equal(
+        dydd._counts(obs, b, np.zeros(2, np.int64)), legacy)
+    # a nonzero rank moves exactly that many boundary-tied obs left
+    np.testing.assert_array_equal(
+        dydd._counts(obs, b, np.array([1, 0])), legacy + [1, -1, 0])
+
+
+@settings(max_examples=50, deadline=None)
+@given(p=st.integers(2, 8), q=st.integers(2, 12),
+       seed=st.integers(0, 2**31 - 1))
+def test_dydd_1d_quantized_realizes_balance_targets(p, q, seed):
+    """Integer-grid (heavily tied) observation streams: the migration
+    realizes the diffusion schedule's balance() targets *exactly* — the
+    step-4 recount equals what balance() scheduled from the
+    post-DD-step loads, and conservation holds."""
+    rng = np.random.default_rng(seed)
+    m = 64
+    obs = rng.integers(0, q, m) / q
+    res = dydd.dydd_1d(obs, p)
+    targets, _ = dydd.balance(res.loads_repartitioned,
+                              dydd.chain_edges(p))
+    np.testing.assert_array_equal(res.loads_final, targets)
+    assert res.loads_final.sum() == m
+    # the realized decomposition is reproducible from the carried state
+    np.testing.assert_array_equal(
+        dydd._counts(obs, res.boundaries, res.tie_ranks), targets)
+
+
 def test_star_graph_example3_structure():
     """Example 3: star topology (deg(1) = p-1)."""
     for p in (2, 4, 8, 16, 32):

@@ -1,0 +1,245 @@
+"""KDTreeDomain: Domain-protocol conformance, partition/halo geometry,
+median-split rebalancing with migration accounting, the irregular
+face-adjacency processor graph, and the anisotropic-network win over the
+shelf tiling (the ROADMAP quadtree/k-d item)."""
+import numpy as np
+import pytest
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from repro.assim import AssimilationEngine, EngineConfig, streams  # noqa: E402
+from repro.core import domain as domain_mod  # noqa: E402
+from repro.core import kdtree as kdtree_mod  # noqa: E402
+
+
+def band_obs(m=500, seed=0, width=0.02):
+    """A thin diagonal band — the anisotropic configuration the shelf
+    tiling wastes cells on."""
+    rng = np.random.default_rng(seed)
+    t = rng.uniform(0, 1, m)
+    y = np.clip(t + width * rng.normal(size=m), 0, np.nextafter(1.0, 0))
+    return np.stack([t, y], axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Domain protocol suite — all three implementations.
+# ---------------------------------------------------------------------------
+
+DOMAINS = {
+    "interval": lambda: domain_mod.Interval1D(n=96, p=6),
+    "shelf": lambda: domain_mod.ShelfTiling2D(nx=16, ny=12, pr=2, pc=3),
+    "kdtree": lambda: kdtree_mod.KDTreeDomain(nx=16, ny=12, p=6),
+}
+
+
+def domain_obs(dom, m=300, seed=0):
+    rng = np.random.default_rng(seed)
+    if dom.ndim == 1:
+        return np.sort(rng.uniform(0, 1, m))
+    return band_obs(m, seed)
+
+
+@pytest.mark.parametrize("kind", sorted(DOMAINS))
+def test_domain_protocol_suite(kind):
+    """The shared Domain contract: protocol conformance, count
+    conservation, core partition of the state mesh, rebalance bookkeeping
+    and a connected processor graph."""
+    dom = DOMAINS[kind]()
+    assert isinstance(dom, domain_mod.Domain)
+    obs = domain_obs(dom)
+    counts = dom.counts(obs)
+    assert counts.shape == (dom.p,) and counts.sum() == obs.shape[0]
+    # zero-overlap decomposition partitions the mesh exactly
+    dec = dom.decomposition(overlap=0)
+    assert dec.p == dom.p and dec.n == dom.n
+    assert (dec.column_multiplicity == 1).all()
+    assert sum(len(np.asarray(c)) for c in dec.col_sets) == dom.n
+    # rebalance adopts boundaries: the counts afterwards match a fresh
+    # recount and the migration volume is bounded by m
+    info = dom.rebalance(obs)
+    assert 0 <= info.migrated <= obs.shape[0]
+    assert dom.counts(obs).sum() == obs.shape[0]
+    # processor graph touches every subdomain
+    edges = dom.graph_edges()
+    touched = set()
+    for i, j in edges:
+        assert 0 <= i < j < dom.p
+        touched |= {i, j}
+    assert touched == set(range(dom.p))
+    # mesh axes multiply to p
+    names, shape = dom.mesh_axes()
+    assert int(np.prod(shape)) == dom.p and len(names) == len(shape)
+    # positions for the observation operator stay in [0, 1)
+    pos = dom.obs_positions(obs)
+    assert pos.shape == (obs.shape[0],)
+    assert (pos >= 0).all() and (pos < 1).all()
+    assert dom.describe()["n"] == dom.n
+
+
+# ---------------------------------------------------------------------------
+# k-d specifics: geometry, halos, migration accounting.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("p", [1, 2, 3, 5, 8])
+def test_kdtree_partitions_mesh_for_any_p(p):
+    dom = kdtree_mod.KDTreeDomain(nx=12, ny=10, p=p)
+    dec = dom.decomposition(overlap=0)
+    assert (dec.column_multiplicity == 1).all()
+    # leaves tile [0,1]^2: areas sum to 1, every rect is proper
+    r = dom.rects
+    assert np.isclose(((r[:, 1] - r[:, 0]) * (r[:, 3] - r[:, 2])).sum(),
+                      1.0)
+    assert (r[:, 1] > r[:, 0]).all() and (r[:, 3] > r[:, 2]).all()
+
+
+def test_kdtree_rebalance_adapts_to_diagonal_band():
+    obs = band_obs(600, seed=1)
+    dom = kdtree_mod.KDTreeDomain(nx=16, ny=12, p=8)
+    before = dom.counts(obs)
+    info = dom.rebalance(obs)
+    after = dom.counts(obs)
+    assert after.sum() == 600
+    assert after.max() / after.mean() < before.max() / before.mean()
+    assert after.max() / after.mean() < 1.1   # median splits ~ exact
+    assert info.rounds == 3                   # depth of an 8-leaf tree
+    # warm restart on the same stream is a no-op: leaf identity is
+    # stable, so nothing migrates
+    assert dom.rebalance(obs).migrated == 0
+
+
+def test_kdtree_migration_counted_against_previous_leaves():
+    """Migration volume counts owner changes against the *previous* leaf
+    assignment, not against a fresh uniform tree."""
+    dom = kdtree_mod.KDTreeDomain(nx=16, ny=12, p=4)
+    rng = np.random.default_rng(3)
+    a = rng.uniform(0, 1, (400, 2))
+    dom.rebalance(a)
+    b = a.copy()
+    b[:50] = rng.uniform(0, 1, (50, 2))    # jitter an eighth of the obs
+    owners_before = dom._owners(b)         # against the *previous* leaves
+    info = dom.rebalance(b)
+    moved = int((dom._owners(b) != owners_before).sum())
+    assert info.migrated == moved
+    assert info.migrated <= 400
+
+
+def test_kdtree_overlap_halo_rectangular_and_clipped():
+    dom = kdtree_mod.KDTreeDomain(nx=16, ny=12, p=4)
+    dom.rebalance(band_obs(400, seed=2))
+    core = dom.decomposition(overlap=0)
+    dec = dom.decomposition(overlap=2)
+    assert dec.has_overlap
+    for i in range(dom.p):
+        c0 = set(np.asarray(core.col_sets[i]).tolist())
+        c2 = set(np.asarray(dec.col_sets[i]).tolist())
+        assert c0 <= c2                     # halo only ever adds columns
+        # the halo stays inside the mesh
+        assert all(0 <= c < dom.n for c in c2)
+        # expanded window is still a raster rectangle: row spans are equal
+        cols = np.asarray(dec.col_sets[i])
+        xs = cols % dom.nx
+        ys = cols // dom.nx
+        assert (np.unique(xs).size * np.unique(ys).size) == cols.size
+    # domain-boundary faces absorbed nothing: a leaf touching x=0 keeps
+    # its left edge at column 0 area
+    with pytest.raises(ValueError, match="overlap"):
+        dom.decomposition(overlap=-1)
+
+
+def test_kdtree_face_adjacency_graph():
+    dom = kdtree_mod.KDTreeDomain(nx=16, ny=12, p=8)
+    dom.rebalance(band_obs(500, seed=4))
+    edges = dom.graph_edges()
+    rects = dom.rects
+    for i, j in edges:
+        xi, xj = rects[i], rects[j]
+        share_x = xi[1] == xj[0] or xj[1] == xi[0]
+        share_y = xi[3] == xj[2] or xj[3] == xi[2]
+        assert share_x or share_y
+    # the first cut splits the domain in two: the two halves' leaf sets
+    # are internally connected and joined across the cut
+    assert len(edges) >= dom.p - 1
+
+
+def test_kdtree_obs_positions_clamps_boundary_x():
+    """x == 1.0 must stay in its own raster row (the ShelfTiling2D
+    obs_positions bug, fixed for both 2D domains)."""
+    kd = kdtree_mod.KDTreeDomain(nx=4, ny=4, p=4)
+    sh = domain_mod.ShelfTiling2D(nx=4, ny=4, pr=2, pc=2)
+    obs = np.array([[1.0, 0.0], [1.0, 0.6]])
+    for dom in (kd, sh):
+        pos = dom.obs_positions(obs)
+        assert pos[0] < 0.25            # row 0 ends at 1/ny = 0.25
+        assert 0.5 <= pos[1] < 0.75     # row 2 of 4
+    np.testing.assert_allclose(kd.obs_positions(obs),
+                               sh.obs_positions(obs))
+
+
+def test_kdtree_cost_offsets_shift_leaf_budgets():
+    """Overlap-aware rebalance: a leaf carrying fixed halo cost is budgeted
+    fewer observations."""
+    obs = band_obs(600, seed=5)
+    base = kdtree_mod.KDTreeDomain(nx=16, ny=12, p=4)
+    base.rebalance(obs)
+    costly = kdtree_mod.KDTreeDomain(nx=16, ny=12, p=4)
+    off = np.array([120, 0, 0, 0], np.float64)
+    costly.rebalance(obs, cost_offsets=off)
+    assert costly.counts(obs).sum() == 600
+    assert costly.counts(obs)[0] < base.counts(obs)[0]
+    with pytest.raises(ValueError, match="cost_offsets"):
+        base.rebalance(obs, cost_offsets=np.zeros(3))
+
+
+# ---------------------------------------------------------------------------
+# Engine integration: solve parity and the anisotropic win over the shelf.
+# ---------------------------------------------------------------------------
+
+def test_kdtree_engine_matches_one_shot_solve():
+    cfg = EngineConfig(ndim=2, domain_kind="kdtree", p=4, nx=12, ny=8,
+                       iters=600, damping=0.7, track_reference=True)
+    eng = AssimilationEngine(cfg)
+    journal = eng.run_scenario("satellite_track", m=160, cycles=3, seed=0)
+    for r in journal.records:
+        assert r.error_vs_direct < 1e-8, (r.cycle, r.error_vs_direct)
+        assert sum(r.loads) == 160
+    assert eng.analysis is not None and eng.analysis.shape == (96,)
+
+
+def test_kdtree_engine_overlap_same_fixed_point():
+    """Schwarz halos on the irregular leaf graph reach the same fixed
+    point as the non-overlapping solve."""
+    kw = dict(ndim=2, domain_kind="kdtree", p=4, nx=12, ny=8, iters=600,
+              damping=0.7, track_reference=True)
+    eng = AssimilationEngine(EngineConfig(overlap=2, **kw))
+    dec = eng.domain.decomposition(overlap=2)
+    assert dec.boundaries is None and dec.has_overlap
+    journal = eng.run_scenario("river_gauges", m=160, cycles=2, seed=0)
+    for r in journal.records:
+        assert r.error_vs_direct < 1e-8, (r.cycle, r.error_vs_direct)
+    eng0 = AssimilationEngine(EngineConfig(overlap=0, **kw))
+    eng0.run_scenario("river_gauges", m=160, cycles=2, seed=0)
+    assert float(np.linalg.norm(np.asarray(eng.analysis)
+                                - np.asarray(eng0.analysis))) < 1e-8
+
+
+@pytest.mark.parametrize("name", ["satellite_track", "river_gauges"])
+def test_kdtree_beats_shelf_on_anisotropic_networks(name):
+    """At equal p, the adaptive k-d domain ends the run strictly better
+    balanced than the shelf tiling on the station-network scenarios —
+    the bench acceptance bar, asserted here at test scale."""
+    kw = dict(iters=30, damping=0.7, track_reference=False)
+    shelf = AssimilationEngine(EngineConfig(
+        ndim=2, nx=16, ny=12, pr=2, pc=4, **kw))
+    kd = AssimilationEngine(EngineConfig(
+        ndim=2, domain_kind="kdtree", p=8, nx=16, ny=12, **kw))
+    j_sh = shelf.run_scenario(name, m=300, cycles=4, seed=0)
+    j_kd = kd.run_scenario(name, m=300, cycles=4, seed=0)
+    assert j_kd.imbalance_trajectory[-1] < j_sh.imbalance_trajectory[-1], \
+        (j_kd.imbalance_trajectory, j_sh.imbalance_trajectory)
+
+
+def test_kdtree_registered_scenarios_present():
+    names = streams.available(ndim=2)
+    assert "satellite_track" in names and "river_gauges" in names

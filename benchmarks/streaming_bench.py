@@ -31,6 +31,7 @@ imbalance sits strictly below the shelf's.
 from __future__ import annotations
 
 import argparse
+import contextlib
 import json
 import sys
 
@@ -43,6 +44,8 @@ import numpy as np  # noqa: E402
 from repro.assim import AssimilationEngine, EngineConfig, streams  # noqa: E402
 from repro.core import ddkf, domain, kdtree  # noqa: E402
 from repro.kernels import ops  # noqa: E402
+from repro.obs import meters as obs_meters  # noqa: E402
+from repro.obs import trace as obs_trace  # noqa: E402
 
 
 def make_config(ndim: int, rebalance: bool, args,
@@ -52,7 +55,8 @@ def make_config(ndim: int, rebalance: bool, args,
                   imbalance_threshold=args.threshold,
                   track_reference=args.track_reference,
                   solver=args.solver, overlap=args.overlap,
-                  comm=comm or args.comm, halo_weight=args.halo_weight)
+                  comm=comm or args.comm, halo_weight=args.halo_weight,
+                  record_residuals=not args.no_residuals)
     if ndim == 1:
         return EngineConfig(n=args.n, p=args.p, **common)
     kind = domain_kind or args.domain
@@ -67,6 +71,10 @@ def make_config(ndim: int, rebalance: bool, args,
                         **common)
 
 
+_WALL_CLOCK_S: list = []   # measured per-arm wall-clock, for the trace
+                           # coverage figure (sum of journal cycle times)
+
+
 def run_arm(name: str, rebalance: bool, args, comm: str | None = None,
             domain_kind: str | None = None):
     """Run one engine arm; returns (record_dict, final_analysis)."""
@@ -76,6 +84,7 @@ def run_arm(name: str, rebalance: bool, args, comm: str | None = None,
     journal = eng.run_scenario(name, m=args.m, cycles=args.cycles,
                                seed=args.seed)
     cycle_times = journal.cycle_times
+    _WALL_CLOCK_S.append(float(np.sum(cycle_times)))
     pack_times = [r.pack_time for r in journal.records]
     solve_times = [r.solve_time for r in journal.records]
     imb = journal.imbalance_trajectory
@@ -111,6 +120,22 @@ def run_arm(name: str, rebalance: bool, args, comm: str | None = None,
         "solve_time_mean_s": float(np.mean(solve_times)),
         "repartitions": journal.repartition_count,
         "migrated_total": journal.migrated_total,
+        # Telemetry: per-cycle Schwarz residual histories (empty with
+        # --no-residuals), per-phase p50/p99, per-edge comm bytes + the
+        # assembled (p, p) matrix of the final cycle, per-device solve
+        # times and any straggler flags.
+        "residual_history": [r.residual_history for r in journal.records],
+        "phases": journal.phase_stats(),
+        "comm_edge_bytes_per_cycle": [r.comm_edge_bytes_per_cycle
+                                      for r in journal.records],
+        "comm_matrix_final": obs_meters.comm_matrix(
+            eng.p,
+            journal.records[-1].comm_edge_bytes_per_cycle).tolist(),
+        "comm_mvec_bytes_per_cycle": [r.comm_mvec_bytes_per_cycle
+                                      for r in journal.records],
+        "device_solve_times": [r.device_solve_times
+                               for r in journal.records],
+        "straggler_flags": [r.straggler_flags for r in journal.records],
         "summary": journal.summary(),
     }, (None if eng.analysis is None else np.asarray(eng.analysis))
 
@@ -206,7 +231,25 @@ def main() -> None:
                     "(default: all, 1D and 2D)")
     ap.add_argument("--out", default=None, help="write JSON here "
                     "(default: stdout)")
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="write a Chrome/Perfetto trace_events timeline "
+                    "of every engine run here (open at ui.perfetto.dev)")
+    ap.add_argument("--profile", default=None, metavar="LOGDIR",
+                    help="wrap the runs in jax.profiler.trace into this "
+                    "directory (TensorBoard XPlane; kernel-level)")
+    ap.add_argument("--no-residuals", action="store_true",
+                    help="skip the per-iteration Schwarz residual "
+                    "histories (drops the lax.scan solve variant)")
     args = ap.parse_args()
+
+    # Fresh telemetry sinks for this run: a meters registry (always — the
+    # snapshot lands in the report) and a span tracer when --trace asks
+    # for a timeline.  ExitStack keeps the scenario loop un-indented.
+    obs_meters.set_meters(obs_meters.Meters())
+    tracer = obs_trace.Tracer("streaming_bench") if args.trace else None
+    ctx = contextlib.ExitStack()
+    ctx.enter_context(obs_trace.tracing(tracer))
+    ctx.enter_context(obs_trace.jax_profile(args.profile))
 
     names = args.scenarios or streams.available()
     report = {
@@ -240,9 +283,13 @@ def main() -> None:
         }
         if args.compare_domains and ndim == 2:
             # Shelf-vs-kdtree at equal p (pr*pc cells vs pr*pc leaves):
-            # final imbalance, migration volume, modelled comm bytes —
-            # the anisotropic-network comparison the k-d domain exists
-            # for (a shelf tiling wastes cells on empty strips).
+            # final imbalance, migration volume, modelled comm bytes on
+            # the anisotropic station networks.  Since tie-aware 2D
+            # counting the shelf rank-splits tied coordinate groups and
+            # lands on the m/p rounding floor even here; the kdtree's
+            # geometric median cuts cannot, so the ratio below now
+            # favours the shelf on count balance (the kdtree keeps
+            # arbitrary-p support and strip-free geometry).
             compare_d = {}
             for kind in ("shelf", "kdtree"):
                 if kind == args.domain:
@@ -303,6 +350,25 @@ def main() -> None:
     # Autotuned gram reduction tiles (chosen block_m + timed sweep per
     # packed shape; empty when every pack took the jnp reference path).
     report["gram_autotune"] = ops.gram_tuning_report()
+
+    ctx.close()   # stop profiling, restore the previous tracer
+    # Counter/gauge/series registry the engines and core layers reported
+    # into (comm bytes, halo builds, CG residuals, straggler flags ...).
+    report["meters"] = obs_meters.get_meters().snapshot()
+    if tracer is not None:
+        wall = float(np.sum(_WALL_CLOCK_S))
+        report["trace"] = {
+            "path": args.trace,
+            "wall_clock_s": wall,
+            # Fraction of the measured cycle wall-clock covered by the
+            # engine's "cycle" spans — the acceptance metric (>= 0.95).
+            "cycle_coverage": tracer.coverage("cycle", wall),
+            "events": len(tracer.events),
+        }
+        tracer.save(args.trace)
+        print(f"[streaming_bench] wrote trace {args.trace} "
+              f"(coverage {report['trace']['cycle_coverage']:.3f})",
+              file=sys.stderr)
 
     text = json.dumps(report, indent=2)
     if args.out:

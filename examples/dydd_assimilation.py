@@ -37,6 +37,7 @@ jax.config.update("jax_enable_x64", True)
 import numpy as np  # noqa: E402
 
 from repro.assim import AssimilationEngine, EngineConfig, streams  # noqa: E402
+from repro.obs import trace as obs_trace  # noqa: E402
 
 
 def make_config(args) -> EngineConfig:
@@ -44,7 +45,8 @@ def make_config(args) -> EngineConfig:
                   imbalance_threshold=args.threshold,
                   hysteresis=args.hysteresis, track_reference=True,
                   solver=args.solver, overlap=args.overlap,
-                  comm=args.comm, halo_weight=args.halo_weight)
+                  comm=args.comm, halo_weight=args.halo_weight,
+                  record_residuals=args.residuals)
     if args.ndim == 1:
         return EngineConfig(n=args.n, p=args.p, **common)
     if args.domain == "kdtree":
@@ -108,6 +110,13 @@ def run_scenario(name: str, args) -> None:
               f"{s['comm_bytes_per_cycle_mean'] / 1e3:.1f} kB/cycle "
               f"modelled, halo fraction "
               f"{s['halo_fraction_mean']:.3f}")
+    if s.get("phases"):
+        split = ", ".join(f"{k} {v['p50'] * 1e3:.1f}ms"
+                          for k, v in sorted(s["phases"].items()))
+        print(f"phase p50: {split}")
+    if cfg.record_residuals and s.get("residual_final_mean") is not None:
+        print(f"Schwarz residual (final iter, mean over cycles): "
+              f"{s['residual_final_mean']:.2e}")
 
 
 def main() -> None:
@@ -158,15 +167,30 @@ def main() -> None:
                     choices=streams.available(),
                     help="subset of the registered scenarios "
                     "(default: all of this --ndim)")
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="write a Chrome/Perfetto trace_events timeline "
+                    "of the runs here (open at ui.perfetto.dev)")
+    ap.add_argument("--profile", default=None, metavar="LOGDIR",
+                    help="wrap the runs in jax.profiler.trace into this "
+                    "directory (TensorBoard XPlane; kernel-level)")
+    ap.add_argument("--residuals", action="store_true",
+                    help="journal per-iteration Schwarz residual "
+                    "histories (lax.scan solve variant)")
     args = ap.parse_args()
 
     names = args.scenarios or streams.available(ndim=args.ndim)
-    for name in names:
-        if streams.get(name).ndim != args.ndim:
-            raise SystemExit(
-                f"scenario {name!r} is {streams.get(name).ndim}D; "
-                f"pass --ndim {streams.get(name).ndim}")
-        run_scenario(name, args)
+    tracer = obs_trace.Tracer("dydd_assimilation") if args.trace else None
+    with obs_trace.tracing(tracer), obs_trace.jax_profile(args.profile):
+        for name in names:
+            if streams.get(name).ndim != args.ndim:
+                raise SystemExit(
+                    f"scenario {name!r} is {streams.get(name).ndim}D; "
+                    f"pass --ndim {streams.get(name).ndim}")
+            run_scenario(name, args)
+    if tracer is not None:
+        tracer.save(args.trace)
+        print(f"\nwrote trace {args.trace} "
+              f"({len(tracer.events)} events)")
 
 
 if __name__ == "__main__":

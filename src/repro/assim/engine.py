@@ -28,6 +28,7 @@ on the main thread via a cheap ``dataclasses.replace``.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 from concurrent.futures import ThreadPoolExecutor
@@ -44,8 +45,22 @@ from repro.core import domain as domain_mod
 from repro.core import dydd as dydd_mod
 from repro.core import kdtree as kdtree_mod
 from repro.core import _compat as compat_mod
+from repro.obs import meters as meters_mod
+from repro.obs import trace as trace_mod
+from repro.runtime.straggler import StragglerConfig, StragglerMonitor
 from repro.assim import streams as streams_mod
 from repro.assim.metrics import CycleMetrics, Journal, imbalance_ratio
+
+
+@contextlib.contextmanager
+def _phase(phases: dict, name: str, **args):
+    """Time one engine phase into both telemetry sinks: the journal's
+    per-cycle ``phases`` dict (always, via perf_counter) and the active
+    tracer's span timeline (a shared no-op when tracing is off)."""
+    t0 = time.perf_counter()
+    with trace_mod.span(name, **args):
+        yield
+    phases[name] = phases.get(name, 0.0) + (time.perf_counter() - t0)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -116,6 +131,11 @@ class EngineConfig:
                                       # halo column added to the loads the
                                       # diffusion schedule balances (0 =
                                       # unweighted, the historic policy)
+    record_residuals: bool = False    # journal the per-iteration Schwarz
+                                      # update-norm history (switches the
+                                      # inner loop to lax.scan; identical
+                                      # numerics, one extra (iters,)
+                                      # output per solve)
 
 
 def _resolve_mesh_shape(cfg: EngineConfig) -> tuple:
@@ -180,6 +200,15 @@ class _Prepared:
     rebalance_suppressed: bool = False  # trigger armed but suppressed
                                         # (previous rebalance already
                                         # left these exact loads)
+    phases: dict = dataclasses.field(default_factory=dict)
+                                        # host-phase durations (count/
+                                        # dydd/halo/pack/data); _run_cycle
+                                        # adds solve before journalling
+    comm_edge_bytes_per_cycle: dict = dataclasses.field(
+        default_factory=dict)           # "i-j" -> per-cycle endpoint
+                                        # bytes (neighbour-path pricing
+                                        # of the halo geometry)
+    comm_mvec_bytes_per_cycle: float = 0.0
 
 
 class AssimilationEngine:
@@ -203,7 +232,8 @@ class AssimilationEngine:
     def __init__(self, config: EngineConfig,
                  forecast: Optional[Callable] = None,
                  mesh=None, mesh_axis=None,
-                 domain: Optional[domain_mod.Domain] = None):
+                 domain: Optional[domain_mod.Domain] = None,
+                 straggler_config: Optional[StragglerConfig] = None):
         self.cfg = config
         self.forecast = forecast or (lambda x: x)
         if config.solver not in ("vmapped", "shardmap"):
@@ -242,6 +272,11 @@ class AssimilationEngine:
         self._suppressed = False  # this cycle's trigger was suppressed
         self._dec_cache: Optional[dd_mod.Decomposition] = None
         self._t_last = time.perf_counter()
+        # One EWMA-deadline straggler monitor per subdomain device; the
+        # shardmap path feeds each its shard-ready time, the vmapped path
+        # feeds monitor 0 the whole-solve time (one logical device).
+        self._stragglers = [StragglerMonitor(straggler_config)
+                            for _ in range(self.p)]
 
     # -- mesh resolution for the sharded solver ----------------------------
 
@@ -351,13 +386,17 @@ class AssimilationEngine:
         t0 = time.perf_counter()
         cfg = self.cfg
         obs = np.asarray(obs, dtype=np.float64)
+        phases: dict = {}
 
-        loads_in = self.domain.counts(obs)
-        imb_before = imbalance_ratio(loads_in)
+        with _phase(phases, "count", cycle=cycle):
+            loads_in = self.domain.counts(obs)
+            imb_before = imbalance_ratio(loads_in)
+            fire = self._should_rebalance(loads_in)
         repartitioned, migrated, rounds = False, 0, 0
-        if self._should_rebalance(loads_in):
-            info = self.domain.rebalance(obs,
-                                         cost_offsets=self._halo_offsets())
+        if fire:
+            with _phase(phases, "dydd", cycle=cycle):
+                info = self.domain.rebalance(
+                    obs, cost_offsets=self._halo_offsets())
             repartitioned = True
             migrated = info.migrated
             rounds = info.rounds
@@ -367,39 +406,54 @@ class AssimilationEngine:
         if repartitioned:
             self._last_rebalance_loads = np.asarray(loads).copy()
 
-        dec = self._current_dec()
-        # Weighted loads: what the overlap-aware schedule balances (the
-        # plain counts when halo_weight is 0).
-        loads_weighted = loads + np.rint(
-            cfg.halo_weight * dec.halo_sizes).astype(np.int64)
-        # Neighbour-exchange schedule (cached on the Decomposition; empty
-        # edge set when there is no overlap) — the comm model prices the
-        # neighbour path even when the solve runs allreduce/vmapped.
-        halo = dec.halo_exchange
-        H1 = cls_mod.observation_operator(self.n,
-                                          self.domain.obs_positions(obs),
-                                          block=self.domain.row_size)
-        A = np.concatenate([self._H0, H1], axis=0)
-        r = np.ones((A.shape[0],))
-        packed_op = ddkf_mod.pack_operator(jnp.asarray(A), jnp.asarray(r),
-                                           dec, mu=cfg.mu)
-        # The batched factor build runs on device; block here (still on
-        # the worker thread under double buffering) so pack_time is honest.
-        jax.block_until_ready(packed_op.L_loc)
+        with _phase(phases, "halo", cycle=cycle):
+            dec = self._current_dec()
+            # Weighted loads: what the overlap-aware schedule balances
+            # (the plain counts when halo_weight is 0).
+            loads_weighted = loads + np.rint(
+                cfg.halo_weight * dec.halo_sizes).astype(np.int64)
+            # Neighbour-exchange schedule (cached on the Decomposition;
+            # empty edge set when there is no overlap) — the comm model
+            # prices the neighbour path even when the solve runs
+            # allreduce/vmapped.
+            halo = dec.halo_exchange
+        with _phase(phases, "pack", cycle=cycle, p=self.p):
+            H1 = cls_mod.observation_operator(
+                self.n, self.domain.obs_positions(obs),
+                block=self.domain.row_size)
+            A = np.concatenate([self._H0, H1], axis=0)
+            r = np.ones((A.shape[0],))
+            packed_op = ddkf_mod.pack_operator(jnp.asarray(A),
+                                               jnp.asarray(r),
+                                               dec, mu=cfg.mu)
+            # The batched factor build runs on device; block here (still
+            # on the worker thread under double buffering) so pack_time
+            # is honest.
+            jax.block_until_ready(packed_op.L_loc)
 
-        # Truth-driven observation data: the truth random-walks each cycle
-        # (deterministic under cfg.seed, independent of any solve result —
-        # which is what makes this whole method pipelineable).
-        self._truth = ((1.0 - cfg.truth_drift) * self._truth
-                       + cfg.truth_drift * self._rng.normal(size=self.n))
-        y1 = H1 @ self._truth + cfg.obs_noise * self._rng.normal(
-            size=H1.shape[0])
+        with _phase(phases, "data", cycle=cycle):
+            # Truth-driven observation data: the truth random-walks each
+            # cycle (deterministic under cfg.seed, independent of any
+            # solve result — which is what makes this whole method
+            # pipelineable).
+            self._truth = ((1.0 - cfg.truth_drift) * self._truth
+                           + cfg.truth_drift * self._rng.normal(
+                               size=self.n))
+            y1 = H1 @ self._truth + cfg.obs_noise * self._rng.normal(
+                size=H1.shape[0])
 
         # Modelled per-cycle communication volume for the configured
         # state-exchange path (with no overlap the neighbour path moves
         # no state bytes at all — only the m-vector all-reduce remains).
         stats = packed_op.comm_stats(halo=halo, comm=cfg.comm)
         comm_bytes = stats["bytes_per_iter_total"] * cfg.iters
+        # Per-edge bytes are always the neighbour-path pricing (the
+        # allreduce path has no per-edge structure to report) — like
+        # comm_bytes on a vmapped run, a model of what the halo geometry
+        # would move, journalled for every comm config.
+        edge_bytes = {k: float(v) * cfg.iters
+                      for k, v in packed_op.edge_send_bytes(halo).items()}
+        mvec_bytes = (stats["mvec_bytes_per_device"] * self.p * cfg.iters)
 
         return _Prepared(cycle=cycle, obs=obs, packed_op=packed_op,
                          H0=self._H0, H1=H1, y1=y1, loads=loads,
@@ -412,28 +466,69 @@ class AssimilationEngine:
                          halo=halo,
                          comm_bytes_per_cycle=float(comm_bytes),
                          halo_fraction=dec.halo_fraction,
-                         rebalance_suppressed=suppressed)
+                         rebalance_suppressed=suppressed,
+                         phases=phases,
+                         comm_edge_bytes_per_cycle=edge_bytes,
+                         comm_mvec_bytes_per_cycle=float(mvec_bytes))
 
     # -- device-side solve (main thread) -----------------------------------
 
     def _solve(self, prep: _Prepared):
-        """Returns (analysis, background) for the cycle."""
+        """Returns (analysis, background, residual_hist, device_times).
+
+        ``residual_hist`` is the per-iteration Schwarz update-norm array
+        (None unless ``record_residuals``); ``device_times`` is the
+        per-device time-to-shard-ready since dispatch on the shardmap
+        path (empty for vmapped — the caller substitutes the whole-solve
+        time for the single logical device).  Shard-ready times are
+        observed by blocking the addressable shards in subdomain order,
+        so device i's figure is an upper bound that includes any wait on
+        devices 0..i-1 the host blocked on first — ordering-biased, but
+        a genuine per-device completion signal on a forced-multi-device
+        host platform, and exactly what the straggler monitor needs
+        (a straggler's shard-ready time is late under any ordering).
+        """
         cfg = self.cfg
         background = (np.zeros(self.n) if self.analysis is None
                       else np.asarray(self.forecast(self.analysis)))
         y0 = prep.H0 @ background
         packed = ddkf_mod.with_rhs(prep.packed_op,
                                    np.concatenate([y0, prep.y1]))
-        if cfg.solver == "shardmap":
-            x = ddkf_mod.solve_shardmap(packed, self.mesh,
-                                        axis=self.mesh_axis,
-                                        iters=cfg.iters,
-                                        damping=cfg.damping,
-                                        comm=cfg.comm, halo=prep.halo)
-        else:
-            x = ddkf_mod.solve_vmapped(packed, iters=cfg.iters,
-                                       damping=cfg.damping)
-        return x, background
+        hist = None
+        device_times: list = []
+        with trace_mod.span("solve", cycle=prep.cycle,
+                            solver=cfg.solver) as sp:
+            t0 = time.perf_counter()
+            if cfg.solver == "shardmap":
+                out = ddkf_mod.solve_shardmap(
+                    packed, self.mesh, axis=self.mesh_axis,
+                    iters=cfg.iters, damping=cfg.damping,
+                    comm=cfg.comm, halo=prep.halo,
+                    residual_history=cfg.record_residuals,
+                    return_per_device=True)
+                x_pd = out[0] if cfg.record_residuals else out
+                if cfg.record_residuals:
+                    hist = out[1]
+                shards = sorted(x_pd.addressable_shards,
+                                key=lambda s: s.index[0].start or 0)
+                for sh in shards:
+                    sh.data.block_until_ready()
+                    dt = time.perf_counter() - t0
+                    device_times.append(dt)
+                    trace_mod.emit(
+                        "solve", t0, dt,
+                        track=f"device {sh.index[0].start or 0}",
+                        cycle=prep.cycle)
+                x = x_pd[0]
+            else:
+                out = ddkf_mod.solve_vmapped(
+                    packed, iters=cfg.iters, damping=cfg.damping,
+                    residual_history=cfg.record_residuals)
+                x = out[0] if cfg.record_residuals else out
+                if cfg.record_residuals:
+                    hist = out[1]
+            sp.fence(x)
+        return x, background, hist, device_times
 
     def _reference_error(self, prep: _Prepared, background: np.ndarray,
                          x: jax.Array) -> float:
@@ -464,7 +559,10 @@ class AssimilationEngine:
         # thread solves cycle t.  _prepare mutates boundary/truth state, so
         # exactly one prepare is in flight at a time (single worker, next
         # submit only after the previous result is claimed).
-        with ThreadPoolExecutor(max_workers=1) as pool:
+        # thread_name_prefix names the worker's trace track: packing
+        # spans land on a "pack_0" row next to the main solve thread.
+        with ThreadPoolExecutor(max_workers=1,
+                                thread_name_prefix="pack") as pool:
             try:
                 first = next(it)
             except StopIteration:
@@ -493,7 +591,7 @@ class AssimilationEngine:
 
     def _run_cycle(self, prep: _Prepared) -> None:
         t0 = time.perf_counter()
-        x, background = self._solve(prep)
+        x, background, hist, device_times = self._solve(prep)
         x = jax.block_until_ready(x)
         now = time.perf_counter()
         solve_time = now - t0
@@ -501,8 +599,44 @@ class AssimilationEngine:
         # double buffering this is what the pipelining actually buys
         # (~max(pack, solve), not their sum).
         cycle_time = now - self._t_last
+        t_cycle0 = self._t_last
         self._t_last = now
         self.analysis = x
+
+        # The cycle span covers the measured wall-clock by construction
+        # (emitted after the fact from the same timestamps cycle_time is
+        # computed from) — the acceptance coverage metric reads these.
+        trace_mod.emit("cycle", t_cycle0, cycle_time, cycle=prep.cycle)
+
+        # Straggler detection: per-device shard-ready times on the
+        # shardmap path; the vmapped solve is one logical device.
+        if not device_times:
+            device_times = [solve_time]
+        flags = [i for i, dt in enumerate(device_times)
+                 if self._stragglers[i].record(dt)]
+
+        residual_history = ([] if hist is None
+                            else [float(v) for v in np.asarray(hist)])
+        phases = dict(prep.phases)
+        phases["solve"] = solve_time
+
+        m = meters_mod.get_meters()
+        m.inc("engine.cycles")
+        if prep.repartitioned:
+            m.inc("engine.rebalance.fired")
+        if prep.rebalance_suppressed:
+            m.inc("engine.rebalance.suppressed")
+        if prep.migrated:
+            m.inc("engine.migrated", prep.migrated)
+        m.observe("engine.imbalance", imbalance_ratio(prep.loads))
+        m.observe("engine.halo_fraction", prep.halo_fraction)
+        m.inc("solve.comm_bytes_per_cycle", prep.comm_bytes_per_cycle)
+        if residual_history:
+            m.observe("engine.residual_final", residual_history[-1])
+        if flags:
+            m.inc("engine.straggler.flags", len(flags))
+            m.event("engine.straggler", cycle=prep.cycle, devices=flags,
+                    device_times=[float(t) for t in device_times])
 
         err = (self._reference_error(prep, background, x)
                if self.cfg.track_reference else float("nan"))
@@ -523,4 +657,10 @@ class AssimilationEngine:
             comm_bytes_per_cycle=prep.comm_bytes_per_cycle,
             halo_fraction=prep.halo_fraction,
             loads_weighted=[int(v) for v in prep.loads_weighted],
-            rebalance_suppressed=prep.rebalance_suppressed))
+            rebalance_suppressed=prep.rebalance_suppressed,
+            phases=phases,
+            residual_history=residual_history,
+            comm_edge_bytes_per_cycle=prep.comm_edge_bytes_per_cycle,
+            comm_mvec_bytes_per_cycle=prep.comm_mvec_bytes_per_cycle,
+            device_solve_times=[float(t) for t in device_times],
+            straggler_flags=flags))

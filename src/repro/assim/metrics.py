@@ -63,15 +63,62 @@ class CycleMetrics:
                                 # would otherwise re-fire the DD step
                                 # every cycle)
 
+    # Observability (the telemetry PR's fields — all default-empty so
+    # journals written before it round-trip unchanged).
+    phases: dict = dataclasses.field(default_factory=dict)
+                                # per-phase host durations (s): count,
+                                # dydd, halo, pack, data, solve — the
+                                # span timings, journalled even when no
+                                # tracer is installed
+    residual_history: list = dataclasses.field(default_factory=list)
+                                # per-iteration Schwarz update norms
+                                # ||x^{k+1} - x^k||_F (empty unless
+                                # record_residuals)
+    comm_edge_bytes_per_cycle: dict = dataclasses.field(
+        default_factory=dict)   # "i-j" -> bytes each endpoint sends per
+                                # cycle, neighbour-path pricing of the
+                                # cycle's halo geometry (modelled for
+                                # every comm config, like comm_bytes on
+                                # vmapped runs); obs.meters.comm_matrix
+                                # turns this into the (p, p) matrix
+    comm_mvec_bytes_per_cycle: float = 0.0
+                                # m-vector all-reduce bytes per cycle,
+                                # summed over devices (comm_bytes_per_
+                                # cycle = matrix.sum() + this, neighbour)
+    device_solve_times: list = dataclasses.field(default_factory=list)
+                                # per-device time-to-shard-ready (s)
+                                # since solve dispatch, device order;
+                                # [solve_time] on the vmapped path
+    straggler_flags: list = dataclasses.field(default_factory=list)
+                                # device indices the EWMA-deadline
+                                # straggler monitor flagged this cycle
+
     def to_dict(self) -> dict:
         d = dataclasses.asdict(self)
         d["loads"] = [int(v) for v in self.loads]
         d["loads_before"] = [int(v) for v in self.loads_before]
         d["loads_weighted"] = [int(v) for v in self.loads_weighted]
+        d["phases"] = {k: float(v) for k, v in self.phases.items()}
+        d["residual_history"] = [float(v) for v in self.residual_history]
+        d["comm_edge_bytes_per_cycle"] = {
+            k: float(v) for k, v in self.comm_edge_bytes_per_cycle.items()}
+        d["device_solve_times"] = [float(v)
+                                   for v in self.device_solve_times]
+        d["straggler_flags"] = [int(v) for v in self.straggler_flags]
         # nan (error untracked) is not valid JSON — serialize as null.
         if not np.isfinite(self.error_vs_direct):
             d["error_vs_direct"] = None
         return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "CycleMetrics":
+        """Inverse of :meth:`to_dict` (null error back to nan); unknown
+        keys are ignored so newer journals load on older readers."""
+        d = dict(d)
+        if d.get("error_vs_direct") is None:
+            d["error_vs_direct"] = float("nan")
+        names = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in d.items() if k in names})
 
 
 @dataclasses.dataclass
@@ -109,6 +156,18 @@ class Journal:
     def cycle_times(self) -> list:
         return [r.cycle_time for r in self.records]
 
+    def phase_stats(self) -> dict:
+        """Per-phase p50/p99/mean durations (s) across all cycles, from
+        the records' ``phases`` dicts: ``{phase: {p50, p99, mean}}``."""
+        series: dict = {}
+        for r in self.records:
+            for k, v in r.phases.items():
+                series.setdefault(k, []).append(float(v))
+        return {k: {"p50": float(np.percentile(v, 50)),
+                    "p99": float(np.percentile(v, 99)),
+                    "mean": float(np.mean(v))}
+                for k, v in series.items()}
+
     def summary(self) -> dict:
         if not self.records:
             return {"cycles": 0}
@@ -135,12 +194,28 @@ class Journal:
                 [r.comm_bytes_per_cycle for r in self.records])),
             "halo_fraction_mean": float(np.mean(
                 [r.halo_fraction for r in self.records])),
+            "phases": self.phase_stats(),
+            "straggler_flags_total": int(sum(
+                len(r.straggler_flags) for r in self.records)),
+            "residual_final_mean": (float(np.mean(
+                [r.residual_history[-1] for r in self.records
+                 if r.residual_history]))
+                if any(r.residual_history for r in self.records)
+                else None),
         }
 
     def to_dict(self) -> dict:
         return {"meta": dict(self.meta),
                 "records": [r.to_dict() for r in self.records],
                 "summary": self.summary()}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "Journal":
+        """Rebuild a journal from ``to_dict`` output (summary is
+        recomputed, not trusted)."""
+        return cls(records=[CycleMetrics.from_dict(r)
+                            for r in d.get("records", [])],
+                   meta=dict(d.get("meta", {})))
 
     def to_json(self, **kw) -> str:
         return json.dumps(self.to_dict(), **kw)

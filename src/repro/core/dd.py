@@ -25,6 +25,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import cls as cls_mod
+from repro.obs import meters as meters_mod
+from repro.obs import trace as trace_mod
 
 
 # ---------------------------------------------------------------------------
@@ -235,6 +237,11 @@ class Decomposition:
         subdomains own no columns, so they acquire no edges and their
         ``slot_idx`` rows are all dump.
         """
+        with trace_mod.span("halo.build", p=self.p,
+                            overlap=int(self.overlap)):
+            return self._build_halo_exchange()
+
+    def _build_halo_exchange(self) -> HaloExchange:
         sets = [np.asarray(c) for c in self.col_sets]
         w = self.pad_width
         # Inverted index: columns with multiplicity > 1 -> owner pairs.
@@ -264,6 +271,12 @@ class Decomposition:
             slot_idx[i, c, :s.size] = si
             slot_idx[j, c, :s.size] = sj
             perms[int(c)] += [(i, j), (j, i)]
+        m = meters_mod.get_meters()
+        m.inc("halo.builds")
+        m.inc("halo.edges", len(edges))
+        m.event("halo.build", p=self.p, overlap=int(self.overlap),
+                edges=len(edges), rounds=rounds, payload_lanes=int(h))
+        m.gauge("halo.rounds", rounds)
         return HaloExchange(p=self.p, w=w, h=h, rounds=rounds,
                            edges=edges, shared=shared,
                            send_slots=tuple(send_slots), colors=colors,

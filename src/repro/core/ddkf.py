@@ -277,12 +277,21 @@ def _local_update(A_i, L_i, mask_i, muov_i, x_i, Ax, r, b):
 # Reference path: subdomains on a batch axis.
 # ---------------------------------------------------------------------------
 
-@partial(jax.jit, static_argnames=("iters",))
+@partial(jax.jit, static_argnames=("iters", "residual_history"))
 def solve_vmapped(packed: PackedDD, iters: int = 60,
-                  damping: float = 1.0) -> jax.Array:
-    """Additive-Schwarz DD-KF; returns the assembled global estimate."""
+                  damping: float = 1.0,
+                  residual_history: bool = False):
+    """Additive-Schwarz DD-KF; returns the assembled global estimate.
 
-    def body(_, x_loc):
+    With ``residual_history=True`` the iteration runs under ``lax.scan``
+    and the call returns ``(x, hist)`` where ``hist[k]`` is the global
+    update norm ``||x_loc^{k+1} - x_loc^k||_F`` — the per-iteration
+    Schwarz residual history the observability layer journals.  The
+    default path is the historic ``fori_loop`` (identical numerics, no
+    per-iteration output).
+    """
+
+    def step(x_loc):
         # partition of unity: overlap columns contribute once to A x_glob
         Ax_parts = jnp.einsum("pmw,pw->pm", packed.A_loc,
                               x_loc * packed.wdiv)
@@ -298,8 +307,16 @@ def solve_vmapped(packed: PackedDD, iters: int = 60,
         return gather_local(packed, x_glob)
 
     x0 = jnp.zeros((packed.p, packed.w), dtype=packed.A_loc.dtype)
-    x_loc = jax.lax.fori_loop(0, iters, body, x0)
-    return assemble(packed, x_loc)
+    if not residual_history:
+        x_loc = jax.lax.fori_loop(0, iters, lambda _, x: step(x), x0)
+        return assemble(packed, x_loc)
+
+    def body(x_loc, _):
+        nxt = step(x_loc)
+        return nxt, jnp.linalg.norm(nxt - x_loc)
+
+    x_loc, hist = jax.lax.scan(body, x0, None, length=iters)
+    return assemble(packed, x_loc), hist
 
 
 def assemble(packed: PackedDD, x_loc: jax.Array) -> jax.Array:
@@ -325,7 +342,9 @@ def solve_shardmap(packed: PackedDD, mesh, axis="sub",
                    iters: int = 60, damping: float = 1.0,
                    comm: str = "allreduce",
                    halo: "dd_mod.HaloExchange | None" = None,
-                   mvec: str = "auto") -> jax.Array:
+                   mvec: str = "auto",
+                   residual_history: bool = False,
+                   return_per_device: bool = False):
     """Same iteration with one device per subdomain, on a 1D or 2D mesh.
 
     ``axis`` is one mesh axis name or a tuple of names — pass
@@ -356,6 +375,14 @@ def solve_shardmap(packed: PackedDD, mesh, axis="sub",
 
     Both paths iterate the identical additive-Schwarz update and agree to
     reduction-order ULPs (collective associativity only).
+
+    Observability hooks: ``residual_history=True`` switches the inner
+    loop to ``lax.scan`` and returns ``(x, hist)`` with ``hist[k]`` the
+    psum'd global update norm per iteration (identical on every device);
+    ``return_per_device=True`` returns the full sharded (p, n) assembly
+    instead of row 0, so the caller can observe per-device shard-ready
+    times (``x.addressable_shards``) before collapsing to the global
+    estimate — what feeds the straggler monitor's per-device rows.
     """
     axes = (axis,) if isinstance(axis, str) else tuple(axis)
     sizes = [mesh.shape[a] for a in axes]
@@ -452,29 +479,45 @@ def solve_shardmap(packed: PackedDD, mesh, axis="sub",
         exchange = (exchange_neighbour if comm == "neighbour"
                     else exchange_allreduce)
 
-        def body(_, x_i):
+        def step(x_i):
             Ax = mvec_allreduce(A_i @ (x_i * wdiv_i))
             new = _local_update(A_i, L_i, mask_i, muov_i, x_i, Ax,
                                 packed.r, packed.b)
             return exchange((1.0 - damping) * x_i + damping * new)
 
         x_i = jnp.zeros((packed.w,), dtype=A_i.dtype)
-        x_i = jax.lax.fori_loop(0, iters, body, x_i)
+        if residual_history:
+            # Per-iteration global update norm: local squared delta,
+            # psum'd over the whole mesh — every device carries the
+            # identical history (overlap slots count with multiplicity,
+            # matching solve_vmapped's (p, w) Frobenius norm).
+            def sbody(x_prev, _):
+                nxt = step(x_prev)
+                d2 = jax.lax.psum(jnp.sum((nxt - x_prev) ** 2), axes)
+                return nxt, jnp.sqrt(d2)
+
+            x_i, hist = jax.lax.scan(sbody, x_i, None, length=iters)
+        else:
+            x_i = jax.lax.fori_loop(0, iters, lambda _, x: step(x), x_i)
+            hist = jnp.zeros((0,), dtype=A_i.dtype)
         # One full assembly at the end (both paths): emit the global
         # estimate.  On the neighbour path this is the only O(n)
         # collective of the whole solve.
-        return (axis_allreduce(scatter_part(x_i))[:packed.n]
-                / packed.mult)[None]
+        return ((axis_allreduce(scatter_part(x_i))[:packed.n]
+                 / packed.mult)[None], hist[None])
 
     specs = P(axes if len(axes) > 1 else axes[0])
     fn = _compat.shard_map(
         per_device, mesh=mesh,
         in_specs=(specs,) * 9,
-        out_specs=specs)
-    out = fn(packed.A_loc, packed.L_loc, packed.mask, packed.muov,
-             packed.wdiv, packed.scatter_cols, packed.gather_cols,
-             packed.mult_loc, slot_idx)
-    return out[0]
+        out_specs=(specs, specs))
+    out, hist = fn(packed.A_loc, packed.L_loc, packed.mask, packed.muov,
+                   packed.wdiv, packed.scatter_cols, packed.gather_cols,
+                   packed.mult_loc, slot_idx)
+    x = out if return_per_device else out[0]
+    if residual_history:
+        return x, hist[0]
+    return x
 
 
 # ---------------------------------------------------------------------------

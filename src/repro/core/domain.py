@@ -230,7 +230,9 @@ class ShelfTiling2D:
     def __init__(self, nx: int, ny: int, pr: int, pc: int,
                  y_edges: np.ndarray | None = None,
                  x_edges: np.ndarray | None = None,
-                 max_rounds: int = 8):
+                 max_rounds: int = 8,
+                 y_tie_ranks: np.ndarray | None = None,
+                 x_tie_ranks: np.ndarray | None = None):
         self.nx, self.ny = int(nx), int(ny)
         self.pr, self.pc = int(pr), int(pc)
         self.max_rounds = int(max_rounds)
@@ -242,6 +244,16 @@ class ShelfTiling2D:
                         else np.asarray(x_edges, np.float64).copy())
         assert self.y_edges.shape == (pr + 1,)
         assert self.x_edges.shape == (pr, pc + 1)
+        # Rank splits of observations tied with a shelf edge (see
+        # dydd2d._counts_2d) — zero means the historic all-right tie rule.
+        self.y_tie_ranks = (np.zeros((max(pr - 1, 0),), np.int64)
+                            if y_tie_ranks is None
+                            else np.asarray(y_tie_ranks, np.int64).copy())
+        self.x_tie_ranks = (np.zeros((pr, max(pc - 1, 0)), np.int64)
+                            if x_tie_ranks is None
+                            else np.asarray(x_tie_ranks, np.int64).copy())
+        assert self.y_tie_ranks.shape == (max(pr - 1, 0),)
+        assert self.x_tie_ranks.shape == (pr, max(pc - 1, 0))
 
     @property
     def n(self) -> int:
@@ -253,8 +265,9 @@ class ShelfTiling2D:
 
     def counts(self, obs: np.ndarray) -> np.ndarray:
         return dydd2d_mod._counts_2d(np.asarray(obs, np.float64),
-                                     self.y_edges,
-                                     self.x_edges).reshape(-1)
+                                     self.y_edges, self.x_edges,
+                                     self.y_tie_ranks,
+                                     self.x_tie_ranks).reshape(-1)
 
     def rebalance(self, obs: np.ndarray,
                   cost_offsets: np.ndarray | None = None) -> RebalanceInfo:
@@ -266,9 +279,13 @@ class ShelfTiling2D:
                                  y_edges=self.y_edges.copy(),
                                  x_edges=self.x_edges.copy(),
                                  max_rounds=self.max_rounds,
-                                 cost_offsets=cost_offsets)
+                                 cost_offsets=cost_offsets,
+                                 y_tie_ranks=self.y_tie_ranks.copy(),
+                                 x_tie_ranks=self.x_tie_ranks.copy())
         self.y_edges = res.y_edges
         self.x_edges = res.x_edges
+        self.y_tie_ranks = res.y_tie_ranks
+        self.x_tie_ranks = res.x_tie_ranks
         return RebalanceInfo(migrated=res.total_movement, rounds=res.rounds)
 
     def decomposition(self, overlap: int = 0) -> dd_mod.Decomposition:

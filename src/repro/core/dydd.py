@@ -32,6 +32,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.obs import meters as meters_mod
+
 
 Edge = tuple  # (i, j) with i < j
 
@@ -149,7 +151,9 @@ def _solve_laplacian_cg(edges_arr: np.ndarray, deg: np.ndarray,
     q = r.copy()
     rs = r @ r
     maxiter = maxiter or 4 * p
+    cg_hist = meters_mod.get_meters().series["dydd.cg_residual"]
     for _ in range(maxiter):
+        cg_hist.append(float(np.sqrt(rs)))
         if rs < tol * tol * max(b @ b, 1e-30):
             break
         Lq = apply_L(q)
@@ -230,6 +234,10 @@ def balance(loads: np.ndarray, edges: Sequence[Edge],
         loads = new
         schedules.append(sch)
     assert int(loads.sum()) == total, "conservation violated"
+    m = meters_mod.get_meters()
+    m.inc("dydd.schedule_rounds", len(schedules))
+    m.inc("dydd.scheduled_movement",
+          sum(s.total_movement for s in schedules))
     return loads, schedules
 
 

@@ -46,48 +46,89 @@ class DyDD2DResult:
     loads_final: np.ndarray     # (pr, pc)
     total_movement: int
     rounds: int = 1              # y-pass/x-pass rounds actually run
+    y_tie_ranks: np.ndarray | None = None   # (pr-1,) strip-boundary ties
+    x_tie_ranks: np.ndarray | None = None   # (pr, pc-1) per-strip cell ties
 
     @property
     def efficiency(self) -> float:
         return dydd.balance_ratio(self.loads_final.reshape(-1))
 
 
+def _split_owners(vals: np.ndarray, edges: np.ndarray,
+                  tie_ranks: np.ndarray | None) -> np.ndarray:
+    """(m,) subdomain owner of each observation along one axis under the
+    rank-split tie rule of :func:`repro.core.dydd._counts`.
+
+    ``tie_ranks=None`` (all-zero ranks) reproduces the historic
+    ``searchsorted(side="right")`` clip assignment bit for bit — every
+    boundary-tied observation on the right side; with ranks, the first
+    ``tie_ranks[k]`` of the observations tied with interior edge ``k+1``
+    (in sorted-rank order) count to its left — the same split the 1D
+    migration realizes, so the 2D recount sees the loads the schedule
+    actually produced instead of dumping whole tie groups on one side.
+    """
+    vals = np.asarray(vals, np.float64)
+    order = np.argsort(vals, kind="stable")
+    owners_sorted = dydd._rank_owners(vals[order], edges, tie_ranks,
+                                      assume_sorted=True)
+    owners = np.empty(vals.shape[0], np.int64)
+    owners[order] = owners_sorted
+    return owners
+
+
 def _counts_2d(obs: np.ndarray, y_edges: np.ndarray,
-               x_edges: np.ndarray) -> np.ndarray:
+               x_edges: np.ndarray,
+               y_tie_ranks: np.ndarray | None = None,
+               x_tie_ranks: np.ndarray | None = None) -> np.ndarray:
+    """(pr, pc) cell loads under the tie-aware rank-split counting rule
+    (``None`` ranks = the historic all-right tie rule, bit for bit)."""
     pr = len(y_edges) - 1
     pc = x_edges.shape[1] - 1
     counts = np.zeros((pr, pc), np.int64)
-    rows = np.clip(np.searchsorted(y_edges, obs[:, 1], side="right") - 1,
-                   0, pr - 1)
+    rows = _split_owners(obs[:, 1], y_edges, y_tie_ranks)
     for r in range(pr):
         xs = obs[rows == r, 0]
-        cols = np.clip(np.searchsorted(x_edges[r], xs, side="right") - 1,
-                       0, pc - 1)
+        cols = _split_owners(
+            xs, x_edges[r],
+            None if x_tie_ranks is None else x_tie_ranks[r])
         counts[r] = np.bincount(cols, minlength=pc)
     return counts
 
 
 def _pass_2d(obs: np.ndarray, pr: int, pc: int, y_edges: np.ndarray,
              x_edges: np.ndarray,
-             cost_offsets: np.ndarray | None = None):
+             cost_offsets: np.ndarray | None = None,
+             y_tie_ranks: np.ndarray | None = None,
+             x_tie_ranks: np.ndarray | None = None):
     """One y-pass + x-pass round of nested 1D DyDD.  Returns the moved
-    edges and the observation migration volume of the round.
+    edges, the tie ranks realizing them, and the observation migration
+    volume of the round.
 
     ``cost_offsets`` (pr, pc) is the overlap-aware halo-cost table: the
     y-pass sees per-strip row sums, the x-pass each strip's row."""
     moved = 0
+    y_tie_ranks = (np.zeros((max(pr - 1, 0),), np.int64)
+                   if y_tie_ranks is None
+                   else np.asarray(y_tie_ranks, np.int64).copy())
+    x_tie_ranks = (np.zeros((pr, max(pc - 1, 0)), np.int64)
+                   if x_tie_ranks is None
+                   else np.asarray(x_tie_ranks, np.int64).copy())
     # --- y-pass: full 1D DyDD on strip loads (chain of strips) -----------
     if pr > 1:
         res_y = dydd.dydd_1d(
             obs[:, 1], pr, boundaries=y_edges.copy(),
             cost_offsets=(None if cost_offsets is None
-                          else cost_offsets.sum(axis=1)))
+                          else cost_offsets.sum(axis=1)),
+            tie_ranks=y_tie_ranks)
         y_edges = res_y.boundaries
+        y_tie_ranks = res_y.tie_ranks
         moved += res_y.total_movement
     # --- x-pass: per strip, full 1D DyDD on cell loads --------------------
+    # Strip membership under the *new* y edges and their rank split: an
+    # observation tied with a moved strip boundary lands in the strip the
+    # y-pass scheduled it to, not blanket-right.
     x_edges = x_edges.copy()
-    rows = np.clip(np.searchsorted(y_edges, obs[:, 1], side="right") - 1,
-                   0, pr - 1)
+    rows = _split_owners(obs[:, 1], y_edges, y_tie_ranks)
     for r in range(pr):
         xs = obs[rows == r, 0]
         if xs.size == 0:
@@ -95,17 +136,21 @@ def _pass_2d(obs: np.ndarray, pr: int, pc: int, y_edges: np.ndarray,
         res_x = dydd.dydd_1d(
             xs, pc, boundaries=x_edges[r].copy(),
             cost_offsets=(None if cost_offsets is None
-                          else cost_offsets[r]))
+                          else cost_offsets[r]),
+            tie_ranks=x_tie_ranks[r])
         x_edges[r] = res_x.boundaries
+        x_tie_ranks[r] = res_x.tie_ranks
         moved += res_x.total_movement
-    return y_edges, x_edges, moved
+    return y_edges, x_edges, y_tie_ranks, x_tie_ranks, moved
 
 
 def dydd_2d(obs: np.ndarray, pr: int, pc: int,
             y_edges: np.ndarray | None = None,
             x_edges: np.ndarray | None = None,
             max_rounds: int = 8,
-            cost_offsets: np.ndarray | None = None) -> DyDD2DResult:
+            cost_offsets: np.ndarray | None = None,
+            y_tie_ranks: np.ndarray | None = None,
+            x_tie_ranks: np.ndarray | None = None) -> DyDD2DResult:
     """Balance m observations (m, 2) in [0,1)² over a pr x pc shelf tiling.
 
     Starts from the given shelf boundaries (uniform if omitted — pass the
@@ -119,6 +164,15 @@ def dydd_2d(obs: np.ndarray, pr: int, pc: int,
     to the loads the nested scheduling passes balance; the convergence
     check then measures deviation of the *weighted* loads.  ``None``
     reproduces the unweighted behaviour bit-for-bit.
+
+    ``y_tie_ranks`` (pr-1,) / ``x_tie_ranks`` (pr, pc-1) carry the
+    boundary-tie split state between online rebalances (the 2D analogue
+    of ``dydd_1d``'s ``tie_ranks``): when observations sit exactly on a
+    shelf edge — quantized coordinates — the recount splits each tie
+    group by rank instead of assigning it wholesale rightward, so the
+    loads the result reports are the loads the migration realized.  The
+    updated ranks come back in the result; thread them into the next
+    call together with the edges.
     """
     obs = np.asarray(obs, dtype=np.float64)
     assert obs.ndim == 2 and obs.shape[1] == 2
@@ -135,7 +189,12 @@ def dydd_2d(obs: np.ndarray, pr: int, pc: int,
     x_edges = (np.tile(np.linspace(0.0, 1.0, pc + 1), (pr, 1))
                if x_edges is None
                else np.asarray(x_edges, np.float64).copy())
-    l_in = _counts_2d(obs, y_edges, x_edges)
+    y_ranks = (np.zeros((max(pr - 1, 0),), np.int64) if y_tie_ranks is None
+               else np.asarray(y_tie_ranks, np.int64).copy())
+    x_ranks = (np.zeros((pr, max(pc - 1, 0)), np.int64)
+               if x_tie_ranks is None
+               else np.asarray(x_tie_ranks, np.int64).copy())
+    l_in = _counts_2d(obs, y_edges, x_edges, y_ranks, x_ranks)
 
     # With halo-cost offsets the target is a balanced *weighted* load:
     # counts + offsets vs the weighted mean.
@@ -146,22 +205,26 @@ def dydd_2d(obs: np.ndarray, pr: int, pc: int,
     rounds = 0
     best_dev = np.inf
     for _ in range(max(1, max_rounds)):
-        y_new, x_new, moved = _pass_2d(obs, pr, pc, y_edges, x_edges,
-                                       cost_offsets=cost_offsets)
-        dev = np.abs(_counts_2d(obs, y_new, x_new) + off - lbar).max()
+        y_new, x_new, yr_new, xr_new, moved = _pass_2d(
+            obs, pr, pc, y_edges, x_edges, cost_offsets=cost_offsets,
+            y_tie_ranks=y_ranks, x_tie_ranks=x_ranks)
+        dev = np.abs(_counts_2d(obs, y_new, x_new, yr_new, xr_new)
+                     + off - lbar).max()
         if dev >= best_dev:
             break  # no improvement: keep the previous round's edges
         y_edges, x_edges = y_new, x_new
+        y_ranks, x_ranks = yr_new, xr_new
         total_moved += moved
         best_dev = dev
         rounds += 1
         if dev < 1.0:
             break
 
-    l_fin = _counts_2d(obs, y_edges, x_edges)
+    l_fin = _counts_2d(obs, y_edges, x_edges, y_ranks, x_ranks)
     return DyDD2DResult(y_edges=y_edges, x_edges=x_edges,
                         loads_initial=l_in, loads_final=l_fin,
-                        total_movement=total_moved, rounds=rounds)
+                        total_movement=total_moved, rounds=rounds,
+                        y_tie_ranks=y_ranks, x_tie_ranks=x_ranks)
 
 
 def make_observations_2d(m: int, kind: str = "clustered",

@@ -133,6 +133,14 @@ def autotune_gram_block(p: int, m: int, w: int, dtype,
                              "sweep_s": sweep,
                              "rejected_vmem": {str(bm): int(fb) for bm, fb
                                                in rejected.items()}}
+    # Journal the decision into the observability registry (first call
+    # per shape only — the cache short-circuits repeats).
+    from repro.obs import meters as meters_mod
+    meters_mod.get_meters().event(
+        "gram.autotune", shape=[int(p), int(m), int(w)],
+        dtype=str(jnp.dtype(dtype)), block_m=int(best),
+        candidates=sorted(int(b) for b in sweep),
+        rejected_vmem=sorted(int(b) for b in rejected))
     return best
 
 

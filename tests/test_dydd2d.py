@@ -224,6 +224,75 @@ def test_dydd_2d_pr1_is_exactly_dydd_1d():
     assert res2.total_movement == res1.total_movement
 
 
+def test_counts_2d_none_ranks_match_historic_rule():
+    """tie_ranks=None reproduces the searchsorted(side='right') + clip
+    counting bit for bit (the pre-tie-fix behaviour, random inputs)."""
+    obs = dydd2d.make_observations_2d(700, kind="clustered", seed=9)
+    y_edges = np.linspace(0.0, 1.0, 4)
+    x_edges = np.tile(np.linspace(0.0, 1.0, 5), (3, 1))
+    rows = np.clip(np.searchsorted(y_edges, obs[:, 1], side="right") - 1,
+                   0, 2)
+    want = np.zeros((3, 4), np.int64)
+    for r in range(3):
+        xs = obs[rows == r, 0]
+        cols = np.clip(np.searchsorted(x_edges[r], xs, side="right") - 1,
+                       0, 3)
+        want[r] = np.bincount(cols, minlength=4)
+    got = dydd2d._counts_2d(obs, y_edges, x_edges)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_dydd_2d_quantized_ties_split_across_boundaries():
+    """The carried-over ROADMAP bug: a quantized stream whose y values
+    all sit exactly on the strip boundary used to count wholesale into
+    the lower strip (historic all-right tie rule), so the recount never
+    saw the loads the migration realized and the result stayed [m, 0]
+    per column.  With the rank-split recount (the 2D analogue of the 1D
+    tie_ranks fix) the schedule's targets are realized exactly."""
+    m = 16
+    obs = np.stack([np.linspace(0.03, 0.97, m), np.full(m, 0.5)], axis=1)
+    res = dydd2d.dydd_2d(obs, pr=2, pc=2)
+    assert res.loads_final.sum() == m
+    # Perfect split: every cell gets m/4 despite every y being tied.
+    np.testing.assert_array_equal(res.loads_final,
+                                  np.full((2, 2), m // 4))
+    assert res.y_tie_ranks is not None and res.y_tie_ranks[0] == m // 2
+    # The counting rule itself honours the returned ranks.
+    np.testing.assert_array_equal(
+        dydd2d._counts_2d(obs, res.y_edges, res.x_edges,
+                          res.y_tie_ranks, res.x_tie_ranks),
+        res.loads_final)
+
+
+def test_dydd_2d_x_ties_within_strip_split():
+    """Per-strip x ties: quantized x coordinates tied on a cell edge
+    split by rank inside each strip independently."""
+    rng = np.random.default_rng(11)
+    # Two strips, 12 obs each, every x equal to 0.5 (the pc=2 cell edge).
+    ys = np.concatenate([rng.uniform(0.0, 0.45, 12),
+                         rng.uniform(0.55, 1.0, 12)])
+    obs = np.stack([np.full(24, 0.5), ys], axis=1)
+    res = dydd2d.dydd_2d(obs, pr=2, pc=2)
+    np.testing.assert_array_equal(res.loads_final, np.full((2, 2), 6))
+    assert res.x_tie_ranks is not None
+    np.testing.assert_array_equal(res.x_tie_ranks, np.full((2, 1), 6))
+
+
+def test_dydd_2d_tie_ranks_thread_through_warm_start():
+    """DyDD2DResult's tie ranks carry into the next online rebalance the
+    same way boundaries do — the warm-started recount sees the realized
+    loads, so an already-balanced quantized stream needs no movement."""
+    m = 16
+    obs = np.stack([np.linspace(0.03, 0.97, m), np.full(m, 0.5)], axis=1)
+    first = dydd2d.dydd_2d(obs, pr=2, pc=2)
+    warm = dydd2d.dydd_2d(obs, pr=2, pc=2,
+                          y_edges=first.y_edges, x_edges=first.x_edges,
+                          y_tie_ranks=first.y_tie_ranks,
+                          x_tie_ranks=first.x_tie_ranks)
+    np.testing.assert_array_equal(warm.loads_initial, first.loads_final)
+    assert warm.total_movement == 0
+
+
 # ---------------------------------------------------------------------------
 # gram kernel.
 # ---------------------------------------------------------------------------

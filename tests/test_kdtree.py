@@ -225,19 +225,31 @@ def test_kdtree_engine_overlap_same_fixed_point():
 
 
 @pytest.mark.parametrize("name", ["satellite_track", "river_gauges"])
-def test_kdtree_beats_shelf_on_anisotropic_networks(name):
-    """At equal p, the adaptive k-d domain ends the run strictly better
-    balanced than the shelf tiling on the station-network scenarios —
-    the bench acceptance bar, asserted here at test scale."""
+def test_adaptive_domains_on_anisotropic_networks(name):
+    """At equal p on the quantized station-network scenarios: the
+    tie-aware shelf (rank-split 2D counting) realizes the diffusion
+    schedule's targets near-exactly — something the k-d tree's purely
+    geometric median cuts cannot do on tied coordinates — and both
+    adaptive domains end far better balanced than a frozen shelf.
+
+    (Before tie-aware 2D counting the kdtree ended strictly below the
+    shelf here; the rank split inverted that — the shelf's final
+    imbalance is now the m/p rounding floor.)"""
     kw = dict(iters=30, damping=0.7, track_reference=False)
     shelf = AssimilationEngine(EngineConfig(
         ndim=2, nx=16, ny=12, pr=2, pc=4, **kw))
+    static = AssimilationEngine(EngineConfig(
+        ndim=2, nx=16, ny=12, pr=2, pc=4, rebalance=False, **kw))
     kd = AssimilationEngine(EngineConfig(
         ndim=2, domain_kind="kdtree", p=8, nx=16, ny=12, **kw))
     j_sh = shelf.run_scenario(name, m=300, cycles=4, seed=0)
+    j_st = static.run_scenario(name, m=300, cycles=4, seed=0)
     j_kd = kd.run_scenario(name, m=300, cycles=4, seed=0)
-    assert j_kd.imbalance_trajectory[-1] < j_sh.imbalance_trajectory[-1], \
-        (j_kd.imbalance_trajectory, j_sh.imbalance_trajectory)
+    assert j_sh.imbalance_trajectory[-1] <= 1.05, j_sh.imbalance_trajectory
+    assert j_sh.imbalance_trajectory[-1] <= j_kd.imbalance_trajectory[-1], \
+        (j_sh.imbalance_trajectory, j_kd.imbalance_trajectory)
+    assert j_kd.imbalance_trajectory[-1] < j_st.imbalance_trajectory[-1], \
+        (j_kd.imbalance_trajectory, j_st.imbalance_trajectory)
 
 
 def test_kdtree_registered_scenarios_present():

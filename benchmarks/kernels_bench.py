@@ -66,6 +66,45 @@ def bench_all(mode_fast: str = "ref"):
     err = float(jnp.max(jnp.abs(out_i - ref.ssd_heads_ref(
         x[:2, :128], dt[:2, :128], A[:2], B[:2, :128], C[:2, :128], 64))))
     rows.append((f"ssd_scan_{bh}x{s}x{p}x{n}", us, f"interp_err={err:.1e}"))
+    # gram — the batched pack-phase reduction N_i = A_i^T diag(r) A_i
+    # over all p subdomain blocks at once (the DD-KF pack's device side)
+    keys = jax.random.split(jax.random.PRNGKey(4), 2)
+    pg, mg, wg = 8, 768, 96
+    Ag = jax.random.normal(keys[0], (pg, mg, wg), jnp.float32)
+    rg = jax.random.uniform(keys[1], (pg, mg), jnp.float32, 0.5, 2.0)
+    us = _time(lambda: ops.gram(Ag, rg, mode=mode_fast))
+    out_i = ops.gram(Ag[:2, :256], rg[:2, :256], mode="interpret",
+                     block_m=128)
+    err = float(jnp.max(jnp.abs(out_i - ref.gram_ref(Ag[:2, :256],
+                                                     rg[:2, :256]))))
+    rows.append((f"gram_pack_{pg}x{mg}x{wg}", us, f"interp_err={err:.1e}"))
+    # fused Schwarz step — fwd (stacked y/u matmat) and bwd (residual
+    # formed in VMEM + transpose product), the solve phase's inner loop
+    keys = jax.random.split(jax.random.PRNGKey(5), 6)
+    xg = jax.random.normal(keys[0], (pg, wg), jnp.float32)
+    wdiv = jax.random.uniform(keys[1], (pg, wg), jnp.float32, 0.5, 1.0)
+    rv = jax.random.uniform(keys[2], (mg,), jnp.float32, 0.5, 2.0)
+    bv = jax.random.normal(keys[3], (mg,), jnp.float32)
+    muov = jax.random.uniform(keys[4], (pg, wg), jnp.float32, 0.0, 1.0)
+    mask = jnp.ones((pg, wg), jnp.float32)
+    us = _time(lambda: ops.schwarz_fwd(Ag, xg, wdiv, mode=mode_fast))
+    yi, ui = ops.schwarz_fwd(Ag[:2, :256], xg[:2], wdiv[:2],
+                             mode="interpret", block_m=128)
+    yr, ur = ref.schwarz_fwd_ref(Ag[:2, :256], xg[:2], wdiv[:2])
+    err = float(max(jnp.max(jnp.abs(yi - yr)), jnp.max(jnp.abs(ui - ur))))
+    rows.append((f"schwarz_fwd_{pg}x{mg}x{wg}", us, f"interp_err={err:.1e}"))
+    y, u = ref.schwarz_fwd_ref(Ag, xg, wdiv)
+    Ax = jnp.sum(y, axis=0)
+    us = _time(lambda: ops.schwarz_bwd(Ag, rv, bv, Ax, u, xg, muov, mask,
+                                       mode=mode_fast))
+    out_i = ops.schwarz_bwd(Ag[:2, :256], rv[:256], bv[:256], Ax[:256],
+                            u[:2, :256], xg[:2], muov[:2], mask[:2],
+                            mode="interpret", block_m=128)
+    out_r = ref.schwarz_bwd_ref(Ag[:2, :256], rv[:256], bv[:256],
+                                Ax[:256], u[:2, :256], xg[:2], muov[:2],
+                                mask[:2])
+    err = float(jnp.max(jnp.abs(out_i - out_r)))
+    rows.append((f"schwarz_bwd_{pg}x{mg}x{wg}", us, f"interp_err={err:.1e}"))
     return rows
 
 

@@ -113,6 +113,14 @@ def extract_metrics(bench: dict) -> dict:
             add(f"scenarios.{name}.comm_compare.modelled_bytes_ratio",
                 sc["comm_compare"]["modelled_bytes_ratio"],
                 direction="min")
+        if "kernel_compare" in sc:
+            # The fused kernel's whole reason to exist: its solve time
+            # must stay at or below the jnp path's (one-sided — a faster
+            # fused solve is never a regression).
+            add(f"scenarios.{name}.kernel_compare"
+                f".fused_over_jnp_solve_ratio",
+                sc["kernel_compare"]["fused_over_jnp_solve_ratio"],
+                direction="max")
     return metrics
 
 

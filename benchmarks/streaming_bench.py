@@ -14,6 +14,9 @@ pricing the allreduce vs neighbour (halo-only ppermute) state exchange
 across overlap widths s = 0..3, and — with ``--compare-comm`` on a
 sharded run — measured wall-clock for both paths side by side plus the
 max-abs difference of their final analyses (the ULP-parity evidence).
+``--compare-kernels`` does the same for the local Schwarz step: the
+historic jnp path vs the fused kernel (``solver_kernel=``), recording
+solve-phase wall-clock shares and the final-analysis parity.
 
 ``--compare-domains`` additionally runs every 2D scenario's DyDD arm on
 both the shelf tiling and the adaptive k-d tree domain at equal p
@@ -50,13 +53,15 @@ from repro.obs import trace as obs_trace  # noqa: E402
 
 def make_config(ndim: int, rebalance: bool, args,
                 comm: str | None = None,
-                domain_kind: str | None = None) -> EngineConfig:
+                domain_kind: str | None = None,
+                solver_kernel: str | None = None) -> EngineConfig:
     common = dict(iters=args.iters, rebalance=rebalance,
                   imbalance_threshold=args.threshold,
                   track_reference=args.track_reference,
                   solver=args.solver, overlap=args.overlap,
                   comm=comm or args.comm, halo_weight=args.halo_weight,
-                  record_residuals=not args.no_residuals)
+                  record_residuals=not args.no_residuals,
+                  solver_kernel=solver_kernel or args.solver_kernel)
     if ndim == 1:
         return EngineConfig(n=args.n, p=args.p, **common)
     kind = domain_kind or args.domain
@@ -76,11 +81,13 @@ _WALL_CLOCK_S: list = []   # measured per-arm wall-clock, for the trace
 
 
 def run_arm(name: str, rebalance: bool, args, comm: str | None = None,
-            domain_kind: str | None = None):
+            domain_kind: str | None = None,
+            solver_kernel: str | None = None):
     """Run one engine arm; returns (record_dict, final_analysis)."""
     ndim = streams.get(name).ndim
     eng = AssimilationEngine(make_config(ndim, rebalance, args, comm=comm,
-                                         domain_kind=domain_kind))
+                                         domain_kind=domain_kind,
+                                         solver_kernel=solver_kernel))
     journal = eng.run_scenario(name, m=args.m, cycles=args.cycles,
                                seed=args.seed)
     cycle_times = journal.cycle_times
@@ -91,6 +98,7 @@ def run_arm(name: str, rebalance: bool, args, comm: str | None = None,
     return {
         "rebalance": rebalance,
         "solver": args.solver,
+        "solver_kernel": solver_kernel or args.solver_kernel,
         "overlap": args.overlap,
         "comm": comm or args.comm,
         "halo_weight": args.halo_weight,
@@ -163,13 +171,16 @@ def comm_sweep(args) -> dict:
         rows = {}
         # stacked rows: the background block (dom.n) + observations
         m = dom.n + args.m
+        mesh_shape = dom.mesh_axes()[1]
         for s in range(4):
             dec = dom.decomposition(overlap=s)
             halo = dec.halo_exchange
             alla = ddkf.comm_model(dom.n, m, dom.p, itemsize,
-                                   comm="allreduce")
+                                   comm="allreduce",
+                                   mesh_shape=mesh_shape)
             neigh = ddkf.comm_model(dom.n, m, dom.p, itemsize,
-                                    halo=halo, comm="neighbour")
+                                    halo=halo, comm="neighbour",
+                                    mesh_shape=mesh_shape)
             rows[f"s{s}"] = {
                 "halo_fraction": dec.halo_fraction,
                 "allreduce_state_bytes_per_device":
@@ -212,6 +223,10 @@ def main() -> None:
     ap.add_argument("--halo-weight", type=float, default=0.0,
                     help="overlap-aware DyDD: work units per halo column "
                     "added to the scheduled loads")
+    ap.add_argument("--solver-kernel", default="auto",
+                    choices=ddkf.SOLVER_KERNELS,
+                    help="local Schwarz step implementation (auto = "
+                    "fused Pallas on TPU, jnp elsewhere)")
     ap.add_argument("--domain", default="shelf",
                     choices=("shelf", "kdtree"),
                     help="2D domain of the main arms: shelf tiling or "
@@ -225,6 +240,11 @@ def main() -> None:
                     help="also run the DyDD arm with both comm paths and "
                     "record wall-clock + modelled bytes side by side "
                     "(meaningful with --solver shardmap)")
+    ap.add_argument("--compare-kernels", action="store_true",
+                    help="also run the DyDD arm with the jnp and the "
+                    "fused Schwarz-step kernel and record wall-clock + "
+                    "solve phase ratio side by side (the fused kernel "
+                    "resolves to its interpret/reference path off-TPU)")
     ap.add_argument("--scenarios", nargs="*", default=None,
                     choices=streams.available(),
                     help="subset of the registered scenarios "
@@ -259,7 +279,8 @@ def main() -> None:
                    "seed": args.seed, "threshold": args.threshold,
                    "solver": args.solver, "overlap": args.overlap,
                    "comm": args.comm, "halo_weight": args.halo_weight,
-                   "domain": args.domain},
+                   "domain": args.domain,
+                   "solver_kernel": args.solver_kernel},
         "scenarios": {},
         # Modelled bytes vs overlap width for both comm paths (no runs
         # needed — the model depends only on the decomposition).
@@ -346,10 +367,48 @@ def main() -> None:
             compare["analysis_max_abs_diff"] = float(np.max(np.abs(
                 analyses["allreduce"] - analyses["neighbour"])))
             report["scenarios"][name]["comm_compare"] = compare
+        if args.compare_kernels:
+            # Jnp-vs-fused Schwarz step on the same scenario: measured
+            # wall-clock and the solve phase's share of the cycle for
+            # both local-step implementations.  Off-TPU "fused" resolves
+            # to the single-pass stacked reference (same arithmetic
+            # structure as the kernel), so the comparison stays honest
+            # on a CPU CI host.
+            kcompare = {}
+            kanalyses = {}
+            for kern in ("jnp", "fused"):
+                if kern == args.solver_kernel:
+                    arm, kanalyses[kern] = dydd, x_dydd
+                else:
+                    print(f"[streaming_bench]   kernel={kern} ...",
+                          file=sys.stderr)
+                    arm, kanalyses[kern] = run_arm(
+                        name, rebalance=True, args=args,
+                        solver_kernel=kern)
+                summ = arm["summary"]
+                solve_p50 = summ["phases"].get("solve", {}).get("p50", 0.0)
+                kcompare[kern] = {
+                    "solve_time_mean_s": arm["solve_time_mean_s"],
+                    "cycle_latency_steady_s": arm["cycle_latency_steady_s"],
+                    "solve_phase_ratio": float(
+                        solve_p50 / max(summ["cycle_time_mean"], 1e-12)),
+                }
+            kcompare["fused_over_jnp_solve_ratio"] = float(
+                kcompare["fused"]["solve_time_mean_s"]
+                / max(kcompare["jnp"]["solve_time_mean_s"], 1e-12))
+            # Both kernels iterate the identical update; the final
+            # analyses may differ only by reduction order (ULPs) — the
+            # CI artifact's parity evidence.
+            kcompare["analysis_max_abs_diff"] = float(np.max(np.abs(
+                kanalyses["jnp"] - kanalyses["fused"])))
+            report["scenarios"][name]["kernel_compare"] = kcompare
 
     # Autotuned gram reduction tiles (chosen block_m + timed sweep per
     # packed shape; empty when every pack took the jnp reference path).
     report["gram_autotune"] = ops.gram_tuning_report()
+    # Same for the fused Schwarz-step kernel (empty when every solve ran
+    # the jnp or reference path).
+    report["schwarz_autotune"] = ops.schwarz_tuning_report()
 
     ctx.close()   # stop profiling, restore the previous tracer
     # Counter/gauge/series registry the engines and core layers reported

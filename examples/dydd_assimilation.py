@@ -37,6 +37,7 @@ jax.config.update("jax_enable_x64", True)
 import numpy as np  # noqa: E402
 
 from repro.assim import AssimilationEngine, EngineConfig, streams  # noqa: E402
+from repro.core import ddkf  # noqa: E402
 from repro.obs import trace as obs_trace  # noqa: E402
 
 
@@ -46,7 +47,8 @@ def make_config(args) -> EngineConfig:
                   hysteresis=args.hysteresis, track_reference=True,
                   solver=args.solver, overlap=args.overlap,
                   comm=args.comm, halo_weight=args.halo_weight,
-                  record_residuals=args.residuals)
+                  record_residuals=args.residuals,
+                  solver_kernel=args.solver_kernel)
     if args.ndim == 1:
         return EngineConfig(n=args.n, p=args.p, **common)
     if args.domain == "kdtree":
@@ -163,6 +165,11 @@ def main() -> None:
     ap.add_argument("--halo-weight", type=float, default=0.0,
                     help="overlap-aware DyDD: work units per halo column "
                     "added to the loads the schedule balances")
+    ap.add_argument("--solver-kernel", default="auto",
+                    choices=ddkf.SOLVER_KERNELS,
+                    help="local Schwarz step: auto (fused Pallas on TPU, "
+                    "jnp elsewhere), jnp, fused, fused_interpret, "
+                    "fused_ref")
     ap.add_argument("--scenarios", nargs="*", default=None,
                     choices=streams.available(),
                     help="subset of the registered scenarios "

@@ -136,6 +136,10 @@ class EngineConfig:
                                       # inner loop to lax.scan; identical
                                       # numerics, one extra (iters,)
                                       # output per solve)
+    solver_kernel: str = "auto"       # local Schwarz step implementation:
+                                      # "auto" (fused Pallas on TPU, jnp
+                                      # elsewhere) | "jnp" | "fused" |
+                                      # "fused_interpret" | "fused_ref"
 
 
 def _resolve_mesh_shape(cfg: EngineConfig) -> tuple:
@@ -209,6 +213,10 @@ class _Prepared:
                                         # bytes (neighbour-path pricing
                                         # of the halo geometry)
     comm_mvec_bytes_per_cycle: float = 0.0
+    comm_mvec_axis_bytes_per_cycle: dict = dataclasses.field(
+        default_factory=dict)           # mesh-axis name -> per-cycle
+                                        # m-vector all-reduce bytes (torus
+                                        # pricing: outer axes full-vector)
 
 
 class AssimilationEngine:
@@ -241,6 +249,10 @@ class AssimilationEngine:
         if config.comm not in ("allreduce", "neighbour"):
             raise ValueError(f"comm must be 'allreduce' or 'neighbour' "
                              f"(got {config.comm!r})")
+        if config.solver_kernel not in ddkf_mod.SOLVER_KERNELS:
+            raise ValueError(
+                f"solver_kernel must be one of {ddkf_mod.SOLVER_KERNELS} "
+                f"(got {config.solver_kernel!r})")
         if config.halo_weight < 0:
             raise ValueError(f"halo_weight is a per-halo-column work cost "
                              f"and must be >= 0 (got {config.halo_weight})")
@@ -423,9 +435,9 @@ class AssimilationEngine:
                 block=self.domain.row_size)
             A = np.concatenate([self._H0, H1], axis=0)
             r = np.ones((A.shape[0],))
-            packed_op = ddkf_mod.pack_operator(jnp.asarray(A),
-                                               jnp.asarray(r),
-                                               dec, mu=cfg.mu)
+            packed_op = ddkf_mod.pack_operator(
+                jnp.asarray(A), jnp.asarray(r), dec, mu=cfg.mu,
+                solver_kernel=cfg.solver_kernel)
             # The batched factor build runs on device; block here (still
             # on the worker thread under double buffering) so pack_time
             # is honest.
@@ -445,7 +457,9 @@ class AssimilationEngine:
         # Modelled per-cycle communication volume for the configured
         # state-exchange path (with no overlap the neighbour path moves
         # no state bytes at all — only the m-vector all-reduce remains).
-        stats = packed_op.comm_stats(halo=halo, comm=cfg.comm)
+        axis_names, axis_shape = self.domain.mesh_axes()
+        stats = packed_op.comm_stats(halo=halo, comm=cfg.comm,
+                                     mesh_shape=axis_shape)
         comm_bytes = stats["bytes_per_iter_total"] * cfg.iters
         # Per-edge bytes are always the neighbour-path pricing (the
         # allreduce path has no per-edge structure to report) — like
@@ -454,6 +468,14 @@ class AssimilationEngine:
         edge_bytes = {k: float(v) * cfg.iters
                       for k, v in packed_op.edge_send_bytes(halo).items()}
         mvec_bytes = (stats["mvec_bytes_per_device"] * self.p * cfg.iters)
+        # Per-torus-axis m-vector all-reduce split (outer axes pay plain
+        # full-vector psum hops; only the innermost rides the
+        # reduce-scatter pricing) — journalled so roofline --solve can
+        # attribute the collective term by mesh axis.
+        mvec_axis_bytes = {
+            name: float(v) * self.p * cfg.iters
+            for name, v in zip(axis_names,
+                               stats["mvec_bytes_per_device_per_axis"])}
 
         return _Prepared(cycle=cycle, obs=obs, packed_op=packed_op,
                          H0=self._H0, H1=H1, y1=y1, loads=loads,
@@ -469,7 +491,8 @@ class AssimilationEngine:
                          rebalance_suppressed=suppressed,
                          phases=phases,
                          comm_edge_bytes_per_cycle=edge_bytes,
-                         comm_mvec_bytes_per_cycle=float(mvec_bytes))
+                         comm_mvec_bytes_per_cycle=float(mvec_bytes),
+                         comm_mvec_axis_bytes_per_cycle=mvec_axis_bytes)
 
     # -- device-side solve (main thread) -----------------------------------
 
@@ -662,5 +685,7 @@ class AssimilationEngine:
             residual_history=residual_history,
             comm_edge_bytes_per_cycle=prep.comm_edge_bytes_per_cycle,
             comm_mvec_bytes_per_cycle=prep.comm_mvec_bytes_per_cycle,
+            comm_mvec_axis_bytes_per_cycle=(
+                prep.comm_mvec_axis_bytes_per_cycle),
             device_solve_times=[float(t) for t in device_times],
             straggler_flags=flags))

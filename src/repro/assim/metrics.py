@@ -85,6 +85,11 @@ class CycleMetrics:
                                 # m-vector all-reduce bytes per cycle,
                                 # summed over devices (comm_bytes_per_
                                 # cycle = matrix.sum() + this, neighbour)
+    comm_mvec_axis_bytes_per_cycle: dict = dataclasses.field(
+        default_factory=dict)   # mesh-axis name -> per-cycle all-reduce
+                                # bytes under torus pricing (outer axes
+                                # move the full vector per psum hop; the
+                                # values sum to comm_mvec_bytes_per_cycle)
     device_solve_times: list = dataclasses.field(default_factory=list)
                                 # per-device time-to-shard-ready (s)
                                 # since solve dispatch, device order;
@@ -102,6 +107,9 @@ class CycleMetrics:
         d["residual_history"] = [float(v) for v in self.residual_history]
         d["comm_edge_bytes_per_cycle"] = {
             k: float(v) for k, v in self.comm_edge_bytes_per_cycle.items()}
+        d["comm_mvec_axis_bytes_per_cycle"] = {
+            k: float(v)
+            for k, v in self.comm_mvec_axis_bytes_per_cycle.items()}
         d["device_solve_times"] = [float(v)
                                    for v in self.device_solve_times]
         d["straggler_flags"] = [int(v) for v in self.straggler_flags]

@@ -71,19 +71,25 @@ class HaloExchange:
     chain neighbours in 1D, plus any halo∩halo pairs a wide overlap
     creates (e.g. diagonal cells whose halos meet at a tiling corner).
 
-    Edges are greedily edge-coloured so that each colour class is a
-    matching of the processor graph: one ``jax.lax.ppermute`` round per
-    class exchanges both directions of every edge in the class without
-    any device appearing twice.  Payloads are padded to the widest edge
-    (``h`` lanes); slot ``w`` of the padded local vector is the dump slot
-    both for gather padding (reads zero) and scatter padding.
+    Each edge (i, j) induces two directed *arcs* i->j and j->i; the arcs
+    are coloured with an optimal bipartite (Konig) edge colouring so that
+    within one colour class every device sends to at most one partner and
+    receives from at most one (possibly different) partner.  One
+    ``jax.lax.ppermute`` of a single packed ``h``-lane buffer per class
+    moves every arc of the class — exactly ``rounds = max degree`` of the
+    neighbour graph permutes per iteration, regardless of how many edges
+    meet at a device (the greedy undirected matching schedule needed up
+    to ``2*maxdeg - 1``).  Payloads are padded to the widest edge (``h``
+    lanes); slot ``w`` of the padded local vector is the dump slot both
+    for gather padding (reads zero) and scatter padding.
 
     Attributes:
       p: subdomain count.
       w: padded local slot width (= ``max |col_set|``, the PackedDD pad
         width); also the dump slot index.
       h: widest per-edge shared-column count (payload lanes per round).
-      rounds: number of colour classes (ppermute rounds per iteration).
+      rounds: number of colour classes (= ppermute rounds per iteration
+        = max degree of the neighbour graph).
       edges: ((i, j), ...) with i < j — column-sharing subdomain pairs.
       shared: per edge, the ascending global column indices both own.
       send_slots: per edge, ``(slots_in_i, slots_in_j)`` — positions of
@@ -91,12 +97,17 @@ class HaloExchange:
         gathers its payload at ``slots_in_i`` and endpoint j scatters the
         received payload at ``slots_in_j`` (and vice versa): the send map
         of one side *is* the recv map of the other.
-      colors: (E,) colour class (= ppermute round) of each edge.
-      perms: per round, the ((src, dst), ...) pairs handed to ppermute —
-        both directions of every edge in the class.
-      slot_idx: (p, rounds, h) int array — device d's payload lane k in
-        round r gathers from / scatters to local slot ``slot_idx[d, r, k]``
-        (``w`` = dump for unused lanes and idle devices).
+      perms: per round, the ((src, dst), ...) directed arcs handed to
+        ppermute — each device appears at most once as src and at most
+        once as dst per round.
+      pack_idx: (p, rounds, h) int32 — device d's round-r *send* buffer
+        lane k gathers from local slot ``pack_idx[d, r, k]`` (``w`` =
+        dump: reads the zero pad, for unused lanes and idle senders).
+      unpack_idx: (p, rounds, h) int32 — device d's round-r *received*
+        buffer lane k scatter-adds into local slot
+        ``unpack_idx[d, r, k]`` (``w`` = dump for unused lanes and idle
+        receivers).  Separate from ``pack_idx`` because in a directed
+        round d's send partner need not be its recv partner.
     """
 
     p: int
@@ -106,9 +117,9 @@ class HaloExchange:
     edges: tuple
     shared: tuple
     send_slots: tuple
-    colors: np.ndarray
     perms: tuple
-    slot_idx: np.ndarray
+    pack_idx: np.ndarray
+    unpack_idx: np.ndarray
 
     def edge_send_bytes(self, itemsize: int) -> dict:
         """Per-iteration bytes each endpoint of each edge sends, keyed
@@ -127,22 +138,63 @@ class HaloExchange:
         return out
 
 
-def _greedy_edge_coloring(edges) -> np.ndarray:
-    """Colour edges so no two edges of one colour share a vertex (each
-    colour class is a matching — one conflict-free ppermute round).
-    Greedy over lexicographically sorted edges uses at most 2*maxdeg - 1
-    colours; on a pr x pc grid graph it lands on the classic <= 4
-    (horizontal/vertical x even/odd parity) classes."""
-    used = defaultdict(set)
-    colors = np.zeros((len(edges),), dtype=np.int64)
-    for k, (i, j) in enumerate(edges):
+def _bipartite_arc_coloring(arcs, p: int) -> list:
+    """Colour directed arcs so that within one colour no device sends
+    twice and no device receives twice — the send side and the recv side
+    are the two shores of a bipartite multigraph, so Konig's theorem
+    applies and the alternating-path algorithm below colours the arcs
+    with exactly ``maxdeg`` colours (maxdeg = the largest number of
+    neighbours any device has; both directions of every edge are arcs,
+    so out-degree == in-degree == degree).
+
+    For each arc (u, v): take ``a`` = the smallest colour free at sender
+    u and ``b`` = the smallest free at receiver v.  If they differ, walk
+    the alternating a/b path starting at v (an a-arc at a receiver, then
+    a b-arc at its sender, ...) and swap its colours — the path can never
+    reach u (u has no a-arc), so afterwards ``a`` is free at both ends.
+    """
+    snd: list = [dict() for _ in range(p)]   # sender side: colour -> arc
+    rcv: list = [dict() for _ in range(p)]   # receiver side
+    color = [-1] * len(arcs)
+
+    def mex(used):
         c = 0
-        while c in used[i] or c in used[j]:
+        while c in used:
             c += 1
-        colors[k] = c
-        used[i].add(c)
-        used[j].add(c)
-    return colors
+        return c
+
+    for e, (u, v) in enumerate(arcs):
+        a = mex(snd[u])
+        b = mex(rcv[v])
+        if a != b:
+            # Collect the maximal a/b-alternating path from v, then flip.
+            path = []
+            node, node_is_rcv, want = v, True, a
+            while True:
+                table = rcv[node] if node_is_rcv else snd[node]
+                arc = table.get(want)
+                if arc is None:
+                    break
+                path.append(arc)
+                au, av = arcs[arc]
+                node, node_is_rcv = (au, False) if node_is_rcv else (av, True)
+                want = b if want == a else a
+            # Two-phase flip: consecutive path arcs share an endpoint, so
+            # deleting and re-inserting arc by arc would clobber the
+            # neighbour's fresh entry.  Clear every old slot first.
+            for arc in path:
+                au, av = arcs[arc]
+                del snd[au][color[arc]], rcv[av][color[arc]]
+            for arc in path:
+                au, av = arcs[arc]
+                new = b if color[arc] == a else a
+                color[arc] = new
+                snd[au][new] = arc
+                rcv[av][new] = arc
+        color[e] = a
+        snd[u][a] = e
+        rcv[v][a] = e
+    return color
 
 
 # ---------------------------------------------------------------------------
@@ -235,7 +287,7 @@ class Decomposition:
         correct on any graph — including the halo∩halo pairs a wide
         overlap creates between non-adjacent subdomains.  Empty-core
         subdomains own no columns, so they acquire no edges and their
-        ``slot_idx`` rows are all dump.
+        ``pack_idx``/``unpack_idx`` rows are all dump.
         """
         with trace_mod.span("halo.build", p=self.p,
                             overlap=int(self.overlap)):
@@ -255,22 +307,32 @@ class Decomposition:
                 for b in range(a + 1, len(own)):
                     edge_cols[(own[a], own[b])].append(col)
         edges = tuple(sorted(edge_cols))
-        colors = _greedy_edge_coloring(edges)
-        rounds = int(colors.max()) + 1 if len(edges) else 0
         shared = tuple(np.array(sorted(edge_cols[e]), dtype=np.int64)
                        for e in edges)
         h = max((s.size for s in shared), default=0)
         send_slots = []
-        slot_idx = np.full((self.p, rounds, h), w, dtype=np.int64)
-        perms: list = [[] for _ in range(rounds)]
-        for (i, j), s, c in zip(edges, shared, colors):
+        for (i, j), s in zip(edges, shared):
             # col_sets are ascending, so position-in-set == searchsorted.
             si = np.searchsorted(sets[i], s)
             sj = np.searchsorted(sets[j], s)
             send_slots.append((si.astype(np.int64), sj.astype(np.int64)))
-            slot_idx[i, c, :s.size] = si
-            slot_idx[j, c, :s.size] = sj
-            perms[int(c)] += [(i, j), (j, i)]
+        # Directed packed schedule: both arcs of every edge, coloured so
+        # each round is a permutation fragment (every device <= 1 send
+        # and <= 1 recv).  Konig colouring uses exactly maxdeg rounds.
+        arcs = [a for e in edges for a in (e, e[::-1])]
+        color = _bipartite_arc_coloring(arcs, self.p)
+        rounds = max(color) + 1 if arcs else 0
+        pack_idx = np.full((self.p, rounds, h), w, dtype=np.int32)
+        unpack_idx = np.full((self.p, rounds, h), w, dtype=np.int32)
+        perms: list = [[] for _ in range(rounds)]
+        for a, ((src, dst), c) in enumerate(zip(arcs, color)):
+            k = a // 2                       # arcs 2k, 2k+1 belong to edge k
+            s = shared[k]
+            si, sj = send_slots[k]
+            ssend, srecv = (si, sj) if src < dst else (sj, si)
+            pack_idx[src, c, :s.size] = ssend
+            unpack_idx[dst, c, :s.size] = srecv
+            perms[int(c)].append((src, dst))
         m = meters_mod.get_meters()
         m.inc("halo.builds")
         m.inc("halo.edges", len(edges))
@@ -279,9 +341,9 @@ class Decomposition:
         m.gauge("halo.rounds", rounds)
         return HaloExchange(p=self.p, w=w, h=h, rounds=rounds,
                            edges=edges, shared=shared,
-                           send_slots=tuple(send_slots), colors=colors,
+                           send_slots=tuple(send_slots),
                            perms=tuple(tuple(pr) for pr in perms),
-                           slot_idx=slot_idx)
+                           pack_idx=pack_idx, unpack_idx=unpack_idx)
 
     def overlap_sets(self):
         """I_{i,i+1} — shared indices between consecutive subdomains."""

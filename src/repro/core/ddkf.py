@@ -53,7 +53,7 @@ from repro.kernels import ops as ops_mod
          data_fields=("A_loc", "L_loc", "cols", "mask", "muov", "wdiv",
                       "mult", "mult_loc", "scatter_cols", "gather_cols",
                       "r", "b"),
-         meta_fields=("n", "p", "w"))
+         meta_fields=("n", "p", "w", "solve_kernel", "solve_block"))
 @dataclasses.dataclass(frozen=True)
 class PackedDD:
     """Host-side packing of a Decomposition into padded device arrays."""
@@ -78,6 +78,10 @@ class PackedDD:
     n: int
     p: int
     w: int
+    solve_kernel: str = "jnp"   # resolved iteration-kernel path: "jnp" |
+                                # "fused" | "fused_interpret" | "fused_ref"
+    solve_block: int | None = None  # autotuned fused-kernel m-tile (None
+                                    # when the path has no blocking)
 
     @property
     def m(self) -> int:
@@ -90,12 +94,13 @@ class PackedDD:
         return halo.edge_send_bytes(np.dtype(self.A_loc.dtype).itemsize)
 
     def comm_stats(self, halo: "dd_mod.HaloExchange | None" = None,
-                   comm: str = "allreduce") -> dict:
+                   comm: str = "allreduce",
+                   mesh_shape: tuple | None = None) -> dict:
         """Modelled per-iteration communication volume for this packing
         (see :func:`comm_model`)."""
         return comm_model(self.n, self.m, self.p,
                           np.dtype(self.A_loc.dtype).itemsize,
-                          halo=halo, comm=comm)
+                          halo=halo, comm=comm, mesh_shape=mesh_shape)
 
 
 # Dense-network regime switch: when the stacked row count m is at least
@@ -106,33 +111,68 @@ class PackedDD:
 MVEC_SCATTER_RATIO = 2.0
 
 
+def _axis_allreduce_elems(length: int, mesh_shape: tuple) -> list:
+    """Per-device element sends of the hierarchical all-reduce
+    ``solve_shardmap.axis_allreduce`` actually runs, per mesh axis.
+
+    Outer axes take a *plain psum* of the full vector — on a torus that
+    is a neighbour-hop ring without a scatter, so each of the (k - 1)
+    hops moves the whole ``length``-vector: ``(k - 1) * length`` element
+    sends per device.  Only the innermost axis gets the
+    bandwidth-optimal reduce-scatter + all-gather pair at
+    ``2 * (k - 1) / k * length``.  Pricing them identically (the old
+    single-ring model) understates outer-axis cost on any mesh with
+    more than one axis.
+    """
+    per_axis = []
+    for i, k in enumerate(mesh_shape):
+        k = int(k)
+        if k <= 1:
+            per_axis.append(0.0)
+        elif i == len(mesh_shape) - 1:
+            per_axis.append(2.0 * (k - 1) / k * length)
+        else:
+            per_axis.append(float(k - 1) * length)
+    return per_axis
+
+
 def comm_model(n: int, m: int, p: int, itemsize: int,
                halo: "dd_mod.HaloExchange | None" = None,
-               comm: str = "allreduce") -> dict:
+               comm: str = "allreduce",
+               mesh_shape: tuple | None = None) -> dict:
     """Modelled per-iteration send volume of one ``solve_shardmap`` sweep.
 
     The model counts payload bytes leaving each device per Schwarz
     iteration, the quantity the paper's overhead term T^p_oh charges:
 
       * ``mvec`` — the (m,) observation-space product every path
-        all-reduces: ~2 * (p-1)/p * m elements per device for a
-        bandwidth-optimal (reduce-scatter + all-gather) all-reduce.
+        all-reduces, priced per mesh axis (``mesh_shape``, outer to
+        inner; default ``(p,)``): outer axes pay full-vector psum hops,
+        the innermost the bandwidth-optimal reduce-scatter + all-gather
+        ring — see :func:`_axis_allreduce_elems`.
       * state exchange — ``comm="allreduce"``: the (n,)-assembled
-        estimate, ~2 * (p-1)/p * n elements per device, *independent of
+        estimate through the same per-axis hierarchy, *independent of
         the overlap width*; ``comm="neighbour"``: only the halo slots,
         ``sum(|shared|)`` elements per edge endpoint — proportional to
         the overlap width s and to nothing else.
 
-    Returns a JSON-ready dict with per-device and total bytes plus the
-    per-edge breakdown (empty for the allreduce path).
+    Returns a JSON-ready dict with per-device and total bytes, the
+    per-axis mvec breakdown, and the per-edge breakdown (empty for the
+    allreduce path).
     """
     if comm not in ("allreduce", "neighbour"):
         raise ValueError(f"comm must be 'allreduce' or 'neighbour' "
                          f"(got {comm!r})")
-    ring = 2.0 * (p - 1) / p if p > 1 else 0.0
-    mvec_dev = ring * m * itemsize
+    mesh_shape = tuple(int(k) for k in (mesh_shape or (p,)))
+    if int(np.prod(mesh_shape)) != p:
+        raise ValueError(f"mesh_shape {mesh_shape} does not factor "
+                         f"p={p} devices")
+    mvec_axis = [e * itemsize for e in _axis_allreduce_elems(m, mesh_shape)]
+    mvec_dev = float(sum(mvec_axis))
     if comm == "allreduce":
-        state_dev = np.full((p,), ring * n * itemsize)
+        state_axis = [e * itemsize
+                      for e in _axis_allreduce_elems(n, mesh_shape)]
+        state_dev = np.full((p,), sum(state_axis))
         per_edge: dict = {}
         rounds = 0
     else:
@@ -144,7 +184,9 @@ def comm_model(n: int, m: int, p: int, itemsize: int,
         rounds = halo.rounds
     return {
         "comm": comm,
-        "mvec_bytes_per_device": float(mvec_dev),
+        "mesh_shape": list(mesh_shape),
+        "mvec_bytes_per_device": mvec_dev,
+        "mvec_bytes_per_device_per_axis": [float(b) for b in mvec_axis],
         "state_bytes_per_device_max": float(state_dev.max(initial=0.0)),
         "state_bytes_per_device_mean": float(state_dev.mean()
                                              if p else 0.0),
@@ -156,11 +198,37 @@ def comm_model(n: int, m: int, p: int, itemsize: int,
 
 
 def pack(prob: cls_mod.CLSProblem, dec: dd_mod.Decomposition,
-         mu: float = 1.0) -> PackedDD:
+         mu: float = 1.0, solver_kernel: str = "auto") -> PackedDD:
     A = jnp.concatenate([prob.H0, prob.H1], axis=0)
     r = jnp.concatenate([prob.R0, prob.R1])
     b = jnp.concatenate([prob.y0, prob.y1])
-    return with_rhs(pack_operator(A, r, dec, mu=mu), b)
+    return with_rhs(pack_operator(A, r, dec, mu=mu,
+                                  solver_kernel=solver_kernel), b)
+
+
+# Iteration-kernel selection: how the per-iteration local step runs.
+# "jnp" is the historic composition (three HBM passes over A_loc per
+# iteration, bit-identical to every previous release); the "fused_*"
+# variants run the two-pass fused step of ``kernels/schwarz_step.py``
+# through the matching ops-mode ("fused" resolves per backend: the
+# native Pallas kernel on TPU, the single-pass stacked-matmat jnp
+# reference elsewhere; "fused_interpret" forces the kernel in interpret
+# mode — the CPU-CI ULP-parity path; "fused_ref" forces the reference).
+SOLVER_KERNELS = ("auto", "jnp", "fused", "fused_interpret", "fused_ref")
+_KERNEL_OPS_MODE = {"fused": "auto", "fused_interpret": "interpret",
+                    "fused_ref": "ref"}
+
+
+def _resolve_solver_kernel(solver_kernel: str) -> str:
+    if solver_kernel not in SOLVER_KERNELS:
+        raise ValueError(f"solver_kernel must be one of {SOLVER_KERNELS} "
+                         f"(got {solver_kernel!r})")
+    if solver_kernel == "auto":
+        # Default to the fused kernel only where it is a different (and
+        # faster) program: on TPU.  Elsewhere "auto" keeps the historic
+        # jnp composition so default numerics stay bit-identical.
+        return "fused" if jax.default_backend() == "tpu" else "jnp"
+    return solver_kernel
 
 
 @partial(jax.jit, static_argnames=("gram_mode", "gram_block"))
@@ -184,7 +252,8 @@ def _factor_batched(A_loc: jax.Array, r: jax.Array, diag_add: jax.Array,
 
 
 def pack_operator(A: jax.Array, r: jax.Array, dec: dd_mod.Decomposition,
-                  mu: float = 1.0, gram_mode: str = "auto") -> PackedDD:
+                  mu: float = 1.0, gram_mode: str = "auto",
+                  solver_kernel: str = "auto") -> PackedDD:
     """Pack the *operator* part of a decomposed CLS problem.
 
     The host slices the p column blocks into the padded (p, m, w) layout;
@@ -199,6 +268,11 @@ def pack_operator(A: jax.Array, r: jax.Array, dec: dd_mod.Decomposition,
 
     ``gram_mode`` selects the kernel path ("auto": Pallas on TPU, jnp
     reference elsewhere — see :mod:`repro.kernels.ops`).
+    ``solver_kernel`` selects the per-iteration step path the solves will
+    run (:data:`SOLVER_KERNELS`); it is resolved here, host-side — the
+    fused paths autotune their ``block_m`` once per shape
+    (``ops.schwarz_block_for``) and the choice rides along statically in
+    the packing's meta fields.
 
     The returned ``PackedDD`` carries a zero rhs; pass it through
     :func:`with_rhs` before solving.
@@ -235,6 +309,10 @@ def pack_operator(A: jax.Array, r: jax.Array, dec: dd_mod.Decomposition,
                                         mode=gram_mode)
     L_loc = _factor_batched(A_loc, r, jnp.asarray(muov + (1.0 - mask)),
                             gram_mode=gram_mode, gram_block=gram_block)
+    solve_kernel = _resolve_solver_kernel(solver_kernel)
+    solve_block = (ops_mod.schwarz_block_for(
+        (p, m, w), A_loc.dtype, mode=_KERNEL_OPS_MODE[solve_kernel])
+        if solve_kernel != "jnp" else None)
     mult_at = np.maximum(counts, 1)[np.clip(cols, 0, n - 1)]
     wdiv = mask / mult_at
     # Precomputed index maps: scatter redirects padding to the dump slot
@@ -251,7 +329,7 @@ def pack_operator(A: jax.Array, r: jax.Array, dec: dd_mod.Decomposition,
                     scatter_cols=jnp.asarray(scatter_cols),
                     gather_cols=jnp.asarray(gather_cols),
                     r=r, b=jnp.zeros((m,), dtype=A_loc.dtype), n=n, p=p,
-                    w=w)
+                    w=w, solve_kernel=solve_kernel, solve_block=solve_block)
 
 
 def with_rhs(packed: PackedDD, b: jax.Array) -> PackedDD:
@@ -289,17 +367,36 @@ def solve_vmapped(packed: PackedDD, iters: int = 60,
     Schwarz residual history the observability layer journals.  The
     default path is the historic ``fori_loop`` (identical numerics, no
     per-iteration output).
+
+    The per-iteration local step follows the packing's resolved
+    ``solve_kernel``: the historic jnp composition, or the fused
+    two-pass step of :mod:`repro.kernels.schwarz_step` (reduction-order
+    ULP parity with the jnp path).
     """
+    kern = packed.solve_kernel
 
     def step(x_loc):
-        # partition of unity: overlap columns contribute once to A x_glob
-        Ax_parts = jnp.einsum("pmw,pw->pm", packed.A_loc,
-                              x_loc * packed.wdiv)
-        Ax = jnp.sum(Ax_parts, axis=0)
-        new = jax.vmap(
-            lambda A_i, L_i, m_i, mu_i, x_i: _local_update(
-                A_i, L_i, m_i, mu_i, x_i, Ax, packed.r, packed.b)
-        )(packed.A_loc, packed.L_loc, packed.mask, packed.muov, x_loc)
+        if kern == "jnp":
+            # partition of unity: overlap columns contribute once to
+            # A x_glob
+            Ax_parts = jnp.einsum("pmw,pw->pm", packed.A_loc,
+                                  x_loc * packed.wdiv)
+            Ax = jnp.sum(Ax_parts, axis=0)
+            new = jax.vmap(
+                lambda A_i, L_i, m_i, mu_i, x_i: _local_update(
+                    A_i, L_i, m_i, mu_i, x_i, Ax, packed.r, packed.b)
+            )(packed.A_loc, packed.L_loc, packed.mask, packed.muov, x_loc)
+        else:
+            mode = _KERNEL_OPS_MODE[kern]
+            y, u = ops_mod.schwarz_fwd(packed.A_loc, x_loc, packed.wdiv,
+                                       mode=mode,
+                                       block_m=packed.solve_block)
+            Ax = jnp.sum(y, axis=0)
+            rhs = ops_mod.schwarz_bwd(packed.A_loc, packed.r, packed.b,
+                                      Ax, u, x_loc, packed.muov,
+                                      packed.mask, mode=mode,
+                                      block_m=packed.solve_block)
+            new = jax.vmap(_chol_solve)(packed.L_loc, rhs) * packed.mask
         x_loc2 = (1.0 - damping) * x_loc + damping * new
         # Overlap consistency: average duplicated columns globally, then
         # gather back (eq. 28).
@@ -435,18 +532,25 @@ def solve_shardmap(packed: PackedDD, mesh, axis="sub",
         return axis_allreduce(part)[:packed.m]
 
     # Neighbour-path schedule arrays (sharded like the packing).  The
-    # perms and round count are static Python; only the per-device slot
-    # maps travel as operands.
+    # perms and round count are static Python; only the per-device
+    # pack/unpack payload maps travel as operands — int32 end to end
+    # (the schedule indexes w + 1 <= 2^31 slots; int64 operands would
+    # silently downcast under default x32 and double the index payload).
     rounds = halo.rounds if comm == "neighbour" else 0
-    slot_idx = (jnp.asarray(halo.slot_idx) if comm == "neighbour"
-                else jnp.zeros((packed.p, 0, 0), jnp.int64))
+    empty = np.zeros((packed.p, 0, 0), np.int32)
+    pack_idx = jnp.asarray(halo.pack_idx if comm == "neighbour" else empty,
+                           jnp.int32)
+    unpack_idx = jnp.asarray(halo.unpack_idx if comm == "neighbour"
+                             else empty, jnp.int32)
+    kern = packed.solve_kernel
 
     def per_device(A_i, L_i, mask_i, muov_i, wdiv_i, scat_i, gath_i,
-                   mloc_i, slots_i):
+                   mloc_i, pack_i, unpack_i):
         # Leading axis of size 1 (= this device's subdomain).
         (A_i, L_i, mask_i, muov_i, wdiv_i, scat_i, gath_i, mloc_i,
-         slots_i) = (A_i[0], L_i[0], mask_i[0], muov_i[0], wdiv_i[0],
-                     scat_i[0], gath_i[0], mloc_i[0], slots_i[0])
+         pack_i, unpack_i) = (A_i[0], L_i[0], mask_i[0], muov_i[0],
+                              wdiv_i[0], scat_i[0], gath_i[0], mloc_i[0],
+                              pack_i[0], unpack_i[0])
 
         def scatter_part(x_i):
             # scat_i parks padding on slot n (< n_pad): same dump trick.
@@ -463,26 +567,44 @@ def solve_shardmap(packed: PackedDD, mesh, axis="sub",
 
         def exchange_neighbour(x_i2):
             # Same average, neighbour-only: own contribution plus the
-            # halo slots received over the coloured ppermute rounds,
-            # divided by the local multiplicity.  Slot w is the dump: it
-            # gathers zero (payload padding) and absorbs scatter padding.
+            # halo slots received over the directed coloured rounds,
+            # divided by the local multiplicity.  Each round is ONE
+            # ppermute of one packed h-lane buffer — this device gathers
+            # its outgoing payload at pack_idx (send partner) and
+            # scatter-adds the received buffer at unpack_idx (recv
+            # partner, not necessarily the same device) — exactly
+            # halo.rounds permutes per iteration however many edges meet
+            # here.  Slot w is the dump: it gathers zero (payload
+            # padding) and absorbs scatter padding.
             xm = x_i2 * mask_i
             acc = jnp.concatenate([xm, jnp.zeros((1,), xm.dtype)])
             xm_pad = acc
             for rnd in range(rounds):
-                buf = xm_pad[slots_i[rnd]]
+                buf = xm_pad[pack_i[rnd]]
                 got = jax.lax.ppermute(buf, ppermute_axis,
                                        perm=halo.perms[rnd])
-                acc = acc.at[slots_i[rnd]].add(got)
+                acc = acc.at[unpack_i[rnd]].add(got)
             return acc[:packed.w] / mloc_i
 
         exchange = (exchange_neighbour if comm == "neighbour"
                     else exchange_allreduce)
 
         def step(x_i):
-            Ax = mvec_allreduce(A_i @ (x_i * wdiv_i))
-            new = _local_update(A_i, L_i, mask_i, muov_i, x_i, Ax,
-                                packed.r, packed.b)
+            if kern == "jnp":
+                Ax = mvec_allreduce(A_i @ (x_i * wdiv_i))
+                new = _local_update(A_i, L_i, mask_i, muov_i, x_i, Ax,
+                                    packed.r, packed.b)
+            else:
+                mode = _KERNEL_OPS_MODE[kern]
+                y, u = ops_mod.schwarz_fwd(A_i[None], x_i[None],
+                                           wdiv_i[None], mode=mode,
+                                           block_m=packed.solve_block)
+                Ax = mvec_allreduce(y[0])
+                rhs = ops_mod.schwarz_bwd(A_i[None], packed.r, packed.b,
+                                          Ax, u, x_i[None], muov_i[None],
+                                          mask_i[None], mode=mode,
+                                          block_m=packed.solve_block)[0]
+                new = _chol_solve(L_i, rhs) * mask_i
             return exchange((1.0 - damping) * x_i + damping * new)
 
         x_i = jnp.zeros((packed.w,), dtype=A_i.dtype)
@@ -509,11 +631,11 @@ def solve_shardmap(packed: PackedDD, mesh, axis="sub",
     specs = P(axes if len(axes) > 1 else axes[0])
     fn = _compat.shard_map(
         per_device, mesh=mesh,
-        in_specs=(specs,) * 9,
+        in_specs=(specs,) * 10,
         out_specs=(specs, specs))
     out, hist = fn(packed.A_loc, packed.L_loc, packed.mask, packed.muov,
                    packed.wdiv, packed.scatter_cols, packed.gather_cols,
-                   packed.mult_loc, slot_idx)
+                   packed.mult_loc, pack_idx, unpack_idx)
     x = out if return_per_device else out[0]
     if residual_history:
         return x, hist[0]

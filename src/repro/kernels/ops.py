@@ -21,6 +21,7 @@ from repro.kernels import flash_attention as _fa
 from repro.kernels import ref as _ref
 from repro.kernels import gram as _gram
 from repro.kernels import rglru_scan as _rg
+from repro.kernels import schwarz_step as _sch
 from repro.kernels import ssd_scan as _ssd
 
 
@@ -165,6 +166,157 @@ def gram_tuning_report() -> dict:
         f"p{p}_m{m}_w{w}_{dt}" + ("_interpret" if it else ""): dict(v)
         for (p, m, w, dt, it), v in _GRAM_TUNE_CACHE.items()
     }
+
+
+# -- schwarz step block_m autotuning ----------------------------------------
+#
+# Same harness as gram, generalized to the fused solve kernel: first call
+# per (p, m_loc, w, dtype, path) times the candidates once (fwd + bwd
+# together — that is exactly what one solver iteration launches), with
+# the same conservative VMEM budget.  ``pack_operator`` resolves the
+# block host-side and threads it statically through the jitted solves.
+
+SCHWARZ_BLOCK_CANDIDATES = GRAM_BLOCK_CANDIDATES
+_SCHWARZ_TUNE_CACHE: dict = {}
+
+
+def schwarz_tile_bytes(block_m: int, w: int) -> int:
+    """f32 VMEM working set of one fused-step grid slot, priced at the
+    union of both passes: the (block_m, w) A tile (+ its masked copy in
+    the bwd pass), the four (block_m,) m-vectors (r, b, Ax, u), the
+    stacked (2, w) xs operand, the (2, block_m) fwd output tile, and the
+    (1, w) accumulator plus the four (w,) local vectors."""
+    return 4 * (2 * block_m * w + 4 * block_m + 2 * w
+                + 2 * block_m + 5 * w)
+
+
+def autotune_schwarz_block(p: int, m: int, w: int, dtype,
+                           interpret: bool = False) -> int:
+    """Pick block_m for a (p, m, w) fused Schwarz step by timing the
+    candidates once (one warmup + one timed launch of fwd+bwd each).
+    Cached per (shape, dtype, path); over-VMEM candidates are rejected
+    without being timed, keeping at least the narrowest."""
+    if not interpret:
+        w = w + (-w % 128)
+    key = (int(p), int(m), int(w), jnp.dtype(dtype).name, bool(interpret))
+    hit = _SCHWARZ_TUNE_CACHE.get(key)
+    if hit is not None:
+        return hit["block_m"]
+    candidates = sorted({min(c, m) for c in SCHWARZ_BLOCK_CANDIDATES})
+    rejected = {bm: schwarz_tile_bytes(bm, w) for bm in candidates
+                if schwarz_tile_bytes(bm, w) > GRAM_VMEM_BUDGET_BYTES}
+    kept = [bm for bm in candidates if bm not in rejected]
+    if not kept:
+        kept = candidates[:1]
+        rejected.pop(kept[0])
+    A = jnp.ones((p, m, w), dtype)
+    xv = jnp.ones((p, w), dtype)
+    mv = jnp.ones((m,), dtype)
+
+    def run(bm):
+        y, u = _sch.schwarz_fwd(A, xv, xv, block_m=bm, interpret=interpret)
+        return _sch.schwarz_bwd(A, mv, mv, jnp.sum(y, 0), u, xv, xv, xv,
+                                block_m=bm, interpret=interpret)
+
+    sweep = {}
+    for bm in kept:
+        jax.block_until_ready(run(bm))
+        t0 = time.perf_counter()
+        jax.block_until_ready(run(bm))
+        sweep[bm] = time.perf_counter() - t0
+    best = min(sweep, key=sweep.get)
+    _SCHWARZ_TUNE_CACHE[key] = {"block_m": best, "time_s": sweep[best],
+                                "sweep_s": sweep,
+                                "rejected_vmem": {str(bm): int(fb) for bm, fb
+                                                  in rejected.items()}}
+    from repro.obs import meters as meters_mod
+    meters_mod.get_meters().event(
+        "schwarz.autotune", shape=[int(p), int(m), int(w)],
+        dtype=str(jnp.dtype(dtype)), block_m=int(best),
+        candidates=sorted(int(b) for b in sweep),
+        rejected_vmem=sorted(int(b) for b in rejected))
+    return best
+
+
+def schwarz_block_for(shape, dtype, mode: str = "auto"):
+    """The block_m the fused solve path will use for this (p, m, w) —
+    autotuned for the kernel paths, ``None`` when the shape resolves to
+    the jnp reference.  Call outside jit (at operator-packing time) and
+    pass through as a static argument."""
+    m = _resolve(mode)
+    if m == "ref" or (mode == "auto" and jnp.dtype(dtype) == jnp.float64):
+        return None
+    p, mm, w = shape
+    return autotune_schwarz_block(p, mm, w, dtype,
+                                  interpret=(m == "interpret"))
+
+
+def schwarz_tuning_report() -> dict:
+    """JSON-serializable snapshot of the schwarz autotune cache (same
+    keying as :func:`gram_tuning_report`)."""
+    return {
+        f"p{p}_m{m}_w{w}_{dt}" + ("_interpret" if it else ""): dict(v)
+        for (p, m, w, dt, it), v in _SCHWARZ_TUNE_CACHE.items()
+    }
+
+
+def schwarz_fwd(A, x, wdiv, *, mode: str = "auto",
+                block_m: int | None = None):
+    """Fused forward Schwarz half: (y, u) = (A @ (x * wdiv), A @ x) in
+    one pass over A.  A: (p, m, w), x/wdiv: (p, w).
+
+    float64 takes the jnp reference under mode="auto" (still single-pass
+    — the reference uses the same stacked matmat); the native kernel
+    pads the lane (w) axis to 128 with zero columns (extra columns
+    contribute nothing to either product)."""
+    m = _resolve(mode)
+    if m == "ref" or (mode == "auto" and A.dtype == jnp.float64):
+        return _ref.schwarz_fwd_ref(A, x, wdiv)
+    if block_m is None:
+        if isinstance(A, jax.core.Tracer):
+            block_m = 256
+        else:
+            p, mm, w_ = A.shape
+            block_m = autotune_schwarz_block(p, mm, w_, A.dtype,
+                                             interpret=(m == "interpret"))
+    w = A.shape[-1]
+    wpad = -w % 128
+    if m == "kernel" and wpad:
+        A = jnp.pad(A, ((0, 0), (0, 0), (0, wpad)))
+        x = jnp.pad(x, ((0, 0), (0, wpad)))
+        wdiv = jnp.pad(wdiv, ((0, 0), (0, wpad)))
+        return _sch.schwarz_fwd(A, x, wdiv, block_m=block_m,
+                                interpret=False)
+    return _sch.schwarz_fwd(A, x, wdiv, block_m=block_m,
+                            interpret=(m == "interpret"))
+
+
+def schwarz_bwd(A, r, b, Ax, u, x, muov, mask, *, mode: str = "auto",
+                block_m: int | None = None):
+    """Fused backward Schwarz half: rhs = (A^T @ (r * (b - Ax + u)) +
+    muov * x) * mask in one pass over A with VMEM-resident residual
+    tiles.  A: (p, m, w), r/b/Ax: (m,), u: (p, m), rest (p, w)."""
+    m = _resolve(mode)
+    if m == "ref" or (mode == "auto" and A.dtype == jnp.float64):
+        return _ref.schwarz_bwd_ref(A, r, b, Ax, u, x, muov, mask)
+    if block_m is None:
+        if isinstance(A, jax.core.Tracer):
+            block_m = 256
+        else:
+            p, mm, w_ = A.shape
+            block_m = autotune_schwarz_block(p, mm, w_, A.dtype,
+                                             interpret=(m == "interpret"))
+    w = A.shape[-1]
+    wpad = -w % 128
+    if m == "kernel" and wpad:
+        pad2 = ((0, 0), (0, wpad))
+        out = _sch.schwarz_bwd(
+            jnp.pad(A, ((0, 0), (0, 0), (0, wpad))), r, b, Ax, u,
+            jnp.pad(x, pad2), jnp.pad(muov, pad2), jnp.pad(mask, pad2),
+            block_m=block_m, interpret=False)
+        return out[:, :w]
+    return _sch.schwarz_bwd(A, r, b, Ax, u, x, muov, mask,
+                            block_m=block_m, interpret=(m == "interpret"))
 
 
 def gram(A, r, *, mode: str = "auto", block_m: int | None = None):

@@ -71,3 +71,21 @@ def ssd_heads_ref(x, dt, A, B, C, chunk: int):
 def gram_ref(A, r):
     """N = A^T diag(r) A, batched.  A: (p, m, w), r: (p, m)."""
     return jnp.einsum("pmw,pm,pmv->pwv", A, r, A)
+
+
+def schwarz_fwd_ref(A, x, wdiv):
+    """Fused forward half of the Schwarz step: (y, u) = (A @ (x * wdiv),
+    A @ x) as ONE stacked matmat over A — same two-column single-pass
+    structure as the kernel, so even the reference reads A once.
+    A: (p, m, w), x/wdiv: (p, w) -> two (p, m) arrays."""
+    xs = jnp.stack([x * wdiv, x], axis=1)          # (p, 2, w)
+    yu = jnp.einsum("pmw,pkw->pkm", A, xs)
+    return yu[:, 0], yu[:, 1]
+
+
+def schwarz_bwd_ref(A, r, b, Ax, u, x, muov, mask):
+    """Fused backward half: rhs = (A^T @ (r * (b - Ax + u)) + muov * x)
+    * mask.  A: (p, m, w), r/b/Ax: (m,), u: (p, m), rest (p, w)."""
+    resid = (b - Ax)[None] + u                     # (p, m)
+    t = r[None] * resid
+    return (jnp.einsum("pmw,pm->pw", A, t) + muov * x) * mask

@@ -110,17 +110,16 @@ def test_elastic_remesh_subprocess(tmp_path):
 import jax, numpy as np, jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.checkpoint import manager as ckpt
+from repro.core._compat import make_device_mesh
 
 tree = {{"w": jnp.arange(64.0).reshape(8, 8)}}
-mesh1 = jax.make_mesh((2, 2), ("data", "model"),
-                      axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh1 = make_device_mesh((2, 2), ("data", "model"))
 sharded = jax.device_put(tree["w"], NamedSharding(mesh1, P("data", "model")))
 ckpt.save_pytree({{"w": sharded}}, r"{tmp_path}", step=1)
 
 for shape, axes, spec in [((4, 1), ("data", "model"), P("data", None)),
                           ((1, 2), ("data", "model"), P(None, "model"))]:
-    mesh2 = jax.make_mesh(shape, axes,
-                          axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh2 = make_device_mesh(shape, axes)
     like = {{"w": jax.ShapeDtypeStruct((8, 8), jnp.float64)}}
     shardings = {{"w": NamedSharding(mesh2, spec)}}
     got, _ = ckpt.restore_pytree(r"{tmp_path}", like=like,

@@ -49,7 +49,33 @@ d_c = float(np.abs(np.asarray(x_a) - np.asarray(x_n)).max())
 assert d_c < 1e-13, d_c
 err_n = float(jnp.linalg.norm(x_n - x_direct))
 assert err_n < 1e-9, err_n
-print("OK", err, d_m, d_c)
+# fused Schwarz-step kernel (interpret path off-TPU): ULP parity with
+# the jnp local step on both solvers
+packed2f = ddkf.pack(prob, dec2, solver_kernel="fused_interpret")
+assert packed2f.solve_kernel == "fused_interpret"
+assert packed2f.solve_block is not None
+x_vj = ddkf.solve_vmapped(packed2, iters=60, damping=0.7)
+x_vf = ddkf.solve_vmapped(packed2f, iters=60, damping=0.7)
+d_v = float(np.abs(np.asarray(x_vj) - np.asarray(x_vf)).max())
+assert d_v < 1e-13, d_v
+x_sj = ddkf.solve_shardmap(packed2, mesh, axis="sub", iters=60,
+                           damping=0.7, comm="neighbour",
+                           halo=dec2.halo_exchange)
+x_sf = ddkf.solve_shardmap(packed2f, mesh, axis="sub", iters=60,
+                           damping=0.7, comm="neighbour",
+                           halo=dec2.halo_exchange)
+d_f = float(np.abs(np.asarray(x_sj) - np.asarray(x_sf)).max())
+assert d_f < 1e-13, d_f
+# the packed buffer exchange issues exactly halo.rounds ppermutes per
+# iteration (the fori_loop body is traced once) regardless of per-pair
+# edge multiplicity
+jaxpr = str(jax.make_jaxpr(lambda pk: ddkf.solve_shardmap(
+    pk, mesh, axis="sub", iters=60, damping=0.7, comm="neighbour",
+    halo=dec2.halo_exchange))(packed2))
+n_pp = jaxpr.count("ppermute")
+assert n_pp == dec2.halo_exchange.rounds, (n_pp,
+                                           dec2.halo_exchange.rounds)
+print("OK", err, d_m, d_c, d_v, d_f)
 """
 
 SCRIPT_2D = r"""
@@ -90,7 +116,17 @@ d_n = float(np.abs(np.asarray(x_s) - np.asarray(x_n)).max())
 assert d_n < 1e-13, d_n
 err_n = float(jnp.linalg.norm(x_n - cls.solve(prob)))
 assert err_n < 1e-9, err_n
-print("OK", d, err, d_n)
+# fused local step on the 2D device mesh: parity with the jnp path
+packedf = ddkf.pack(prob, dec, solver_kernel="fused_interpret")
+x_fj = ddkf.solve_shardmap(packed, mesh, axis=("row", "col"), iters=60,
+                           damping=0.7, comm="neighbour",
+                           halo=dec.halo_exchange)
+x_ff = ddkf.solve_shardmap(packedf, mesh, axis=("row", "col"), iters=60,
+                           damping=0.7, comm="neighbour",
+                           halo=dec.halo_exchange)
+d_f = float(np.abs(np.asarray(x_fj) - np.asarray(x_ff)).max())
+assert d_f < 1e-13, d_f
+print("OK", d, err, d_n, d_f)
 """
 
 SCRIPT_ENGINE = r"""
@@ -144,6 +180,14 @@ d = float(np.abs(np.asarray(x_a) - np.asarray(x_n)).max())
 assert d < 1e-13, d
 err = float(jnp.linalg.norm(x_n - cls.solve(prob)))
 assert err < 1e-9, err
+# fused local step over the irregular leaf graph: parity with jnp
+packedf = ddkf.pack(prob, dec, solver_kernel="fused_interpret")
+x_fj = ddkf.solve_shardmap(packed, mesh, axis="sub", iters=60,
+                           damping=0.7, comm="neighbour", halo=he)
+x_ff = ddkf.solve_shardmap(packedf, mesh, axis="sub", iters=60,
+                           damping=0.7, comm="neighbour", halo=he)
+d_f = float(np.abs(np.asarray(x_fj) - np.asarray(x_ff)).max())
+assert d_f < 1e-13, d_f
 # engine end to end on the leaf graph, both comm paths + vmapped parity
 kw = dict(ndim=2, domain_kind="kdtree", p=8, nx=16, ny=8, iters=200,
           damping=0.7, overlap=1, imbalance_threshold=1.5)

@@ -357,6 +357,86 @@ def test_gram_autotune_rejects_over_vmem_candidates(monkeypatch):
     assert b2 == min(min(c, 512) for c in ops.GRAM_BLOCK_CANDIDATES)
 
 
+@pytest.mark.parametrize("p,m,w", [(4, 300, 32), (2, 512, 64), (1, 64, 16)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
+def test_schwarz_kernel_sweep(p, m, w, dtype):
+    """Interpret-mode fused Schwarz step vs the jnp oracles, both halves,
+    across shapes that exercise ragged last tiles and both dtypes."""
+    rng = np.random.default_rng(0)
+    A = jnp.asarray(rng.normal(size=(p, m, w)), dtype)
+    x = jnp.asarray(rng.normal(size=(p, w)), dtype)
+    wdiv = jnp.asarray(rng.uniform(0.5, 1.0, (p, w)), dtype)
+    rv = jnp.asarray(rng.uniform(0.5, 2.0, m), dtype)
+    bv = jnp.asarray(rng.normal(size=m), dtype)
+    muov = jnp.asarray(rng.uniform(0.0, 1.0, (p, w)), dtype)
+    mask = jnp.asarray(rng.uniform(size=(p, w)) > 0.2, dtype)
+    tol = 1e-5 if dtype == jnp.float32 else 1e-12
+
+    y_i, u_i = ops.schwarz_fwd(A, x, wdiv, mode="interpret", block_m=128)
+    y_r, u_r = ref.schwarz_fwd_ref(A, x, wdiv)
+    sc = float(jnp.max(jnp.abs(y_r)))
+    np.testing.assert_allclose(np.asarray(y_i), np.asarray(y_r),
+                               atol=tol * sc, rtol=tol)
+    np.testing.assert_allclose(np.asarray(u_i), np.asarray(u_r),
+                               atol=tol * sc, rtol=tol)
+
+    Ax = jnp.sum(y_r, axis=0)
+    rhs_i = ops.schwarz_bwd(A, rv, bv, Ax, u_r, x, muov, mask,
+                            mode="interpret", block_m=128)
+    rhs_r = ref.schwarz_bwd_ref(A, rv, bv, Ax, u_r, x, muov, mask)
+    sc = float(jnp.max(jnp.abs(rhs_r)))
+    np.testing.assert_allclose(np.asarray(rhs_i), np.asarray(rhs_r),
+                               atol=tol * sc, rtol=tol)
+    # masked slots come out exactly zero on both paths
+    np.testing.assert_array_equal(
+        np.asarray(rhs_i)[np.asarray(mask) == 0], 0.0)
+
+
+def test_schwarz_autotune_picks_and_caches_block():
+    """First call per shape sweeps the block_m candidates (fwd + bwd
+    timed together — one solver iteration's launches) and caches the
+    winner; the tuning report exposes the chosen block + timed sweep."""
+    shape = (2, 320, 16)
+    b1 = ops.autotune_schwarz_block(*shape, jnp.float32, interpret=True)
+    assert b1 in {min(c, shape[1]) for c in ops.SCHWARZ_BLOCK_CANDIDATES}
+    b2 = ops.autotune_schwarz_block(*shape, jnp.float32, interpret=True)
+    assert b2 == b1
+    report = ops.schwarz_tuning_report()
+    key = "p2_m320_w16_float32_interpret"
+    assert key in report
+    assert report[key]["block_m"] == b1
+    assert set(report[key]["sweep_s"]) == \
+        {min(c, shape[1]) for c in ops.SCHWARZ_BLOCK_CANDIDATES}
+    # f64 under mode="auto" resolves to the jnp reference — no block
+    assert ops.schwarz_block_for(shape, jnp.float64, mode="auto") is None
+    # but the interpret path tunes a block even for f64 (CI parity runs)
+    assert ops.schwarz_block_for(shape, jnp.float64,
+                                 mode="interpret") is not None
+
+
+def test_schwarz_autotune_rejects_over_vmem_candidates(monkeypatch):
+    """Candidates whose fused-step tile footprint exceeds the VMEM budget
+    are skipped without being timed; the narrowest survives even under
+    an absurdly small budget."""
+    shape = (2, 2048, 24)
+    budget = (ops.schwarz_tile_bytes(64, 24)
+              + ops.schwarz_tile_bytes(1024, 24)) // 2
+    monkeypatch.setattr(ops, "GRAM_VMEM_BUDGET_BYTES", budget)
+    b = ops.autotune_schwarz_block(*shape, jnp.float32, interpret=True)
+    key = "p2_m2048_w24_float32_interpret"
+    report = ops.schwarz_tuning_report()
+    assert key in report
+    rej = report[key]["rejected_vmem"]
+    assert rej, "expected at least one over-budget candidate"
+    assert str(b) not in rej
+    assert all(int(v) > budget for v in rej.values())
+    assert not (set(map(int, rej)) & set(report[key]["sweep_s"]))
+    monkeypatch.setattr(ops, "GRAM_VMEM_BUDGET_BYTES", 1)
+    b2 = ops.autotune_schwarz_block(2, 640, 24, jnp.float32,
+                                    interpret=True)
+    assert b2 == min(min(c, 640) for c in ops.SCHWARZ_BLOCK_CANDIDATES)
+
+
 def test_gram_matches_ddkf_pack_normal_matrix():
     """The kernel computes exactly the normal matrices ddkf.pack builds."""
     rng = np.random.default_rng(1)

@@ -46,6 +46,10 @@ PACK_RATIO_TOLERANCE = 0.75
 # Phases gated as cycle-time ratios; the sub-millisecond host phases
 # (count/halo/data) are pure noise at bench scale and are not gated.
 GATED_PHASES = ("solve", "pack")
+# Fleet-vs-sequential throughput ratio (serving_bench): dominated by
+# thread/core scheduling on shared CI runners, so the widest tolerance
+# of any gated metric.
+SERVING_RATIO_TOLERANCE = 0.5
 
 
 def get_path(obj, path: str):
@@ -121,6 +125,14 @@ def extract_metrics(bench: dict) -> dict:
                 f".fused_over_jnp_solve_ratio",
                 sc["kernel_compare"]["fused_over_jnp_solve_ratio"],
                 direction="max")
+    for count, row in bench.get("fleet_counts", {}).items():
+        # serving_bench reports: the fleet's whole reason to exist is
+        # throughput over the sequential per-engine loop.  Gated as a
+        # ratio so machine speed cancels; one-sided with generous
+        # tolerance (thread scheduling is the noisiest thing we gate).
+        add(f"fleet_counts.{count}.fleet_over_sequential_throughput",
+            row["fleet_over_sequential_throughput"],
+            tolerance=SERVING_RATIO_TOLERANCE, direction="min")
     return metrics
 
 
@@ -179,7 +191,8 @@ def run_gate(bench: dict, baseline: dict) -> list:
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--bench", required=True,
-                    help="streaming_bench JSON report to gate")
+                    help="bench JSON report to gate (streaming_bench or "
+                         "serving_bench)")
     ap.add_argument("--baseline", required=True,
                     help="checked-in baseline JSON")
     ap.add_argument("--write-baseline", action="store_true",
@@ -203,9 +216,10 @@ def main() -> None:
         baseline = {
             "description": prev.get(
                 "description",
-                "streaming_bench perf baseline (see regress.py)"),
+                "bench perf baseline (see regress.py)"),
             "command": args.command or prev.get("command", ""),
-            "bench_config": bench.get("config", {}),
+            "bench_config": bench.get("config",
+                                      bench.get("bench_config", {})),
             "metrics": extract_metrics(bench),
         }
         with open(args.baseline, "w") as f:

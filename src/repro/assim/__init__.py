@@ -7,3 +7,4 @@ from repro.assim.engine import AssimilationEngine, EngineConfig  # noqa: F401
 from repro.assim.metrics import (  # noqa: F401
     CycleMetrics, Journal, imbalance_ratio)
 from repro.assim import streams  # noqa: F401
+from repro.assim.serving import FleetServer  # noqa: F401

@@ -394,7 +394,14 @@ class AssimilationEngine:
             return None
         return self.cfg.halo_weight * self._current_dec().halo_sizes
 
-    def _prepare(self, cycle: int, obs: np.ndarray) -> _Prepared:
+    def prepare(self, cycle: int, obs: np.ndarray) -> _Prepared:
+        """Host-side work for one cycle: DyDD decision, repartition,
+        operator packing, observation data.  Depends only on the stream
+        and boundary state — never on a solve result — so it may run on
+        a worker thread while the device solves an earlier cycle.  The
+        engine mutates its domain/truth/rng state here, so at most one
+        ``prepare`` per engine may be in flight at a time (the serving
+        layer's packing pool enforces this per stream)."""
         t0 = time.perf_counter()
         cfg = self.cfg
         obs = np.asarray(obs, dtype=np.float64)
@@ -496,6 +503,20 @@ class AssimilationEngine:
 
     # -- device-side solve (main thread) -----------------------------------
 
+    def solve_input(self, prep: _Prepared):
+        """(rhs-injected packing, background) for a prepared cycle.
+
+        This is the only step that consumes the carried analysis, so it
+        must run *after* the previous cycle's :meth:`complete_cycle` (the
+        fleet runner calls it on the main thread just before batching the
+        cohort; ``run`` reaches it through :meth:`_solve`)."""
+        background = (np.zeros(self.n) if self.analysis is None
+                      else np.asarray(self.forecast(self.analysis)))
+        y0 = prep.H0 @ background
+        packed = ddkf_mod.with_rhs(prep.packed_op,
+                                   np.concatenate([y0, prep.y1]))
+        return packed, background
+
     def _solve(self, prep: _Prepared):
         """Returns (analysis, background, residual_hist, device_times).
 
@@ -512,11 +533,7 @@ class AssimilationEngine:
         (a straggler's shard-ready time is late under any ordering).
         """
         cfg = self.cfg
-        background = (np.zeros(self.n) if self.analysis is None
-                      else np.asarray(self.forecast(self.analysis)))
-        y0 = prep.H0 @ background
-        packed = ddkf_mod.with_rhs(prep.packed_op,
-                                   np.concatenate([y0, prep.y1]))
+        packed, background = self.solve_input(prep)
         hist = None
         device_times: list = []
         with trace_mod.span("solve", cycle=prep.cycle,
@@ -575,7 +592,7 @@ class AssimilationEngine:
         self._t_last = time.perf_counter()
         if not cfg.double_buffer:
             for cycle, obs in enumerate(it):
-                self._run_cycle(self._prepare(cycle, obs))
+                self._run_cycle(self.prepare(cycle, obs))
             return self.journal
 
         # Double-buffered: prepare cycle t+1 on the worker while the main
@@ -590,13 +607,13 @@ class AssimilationEngine:
                 first = next(it)
             except StopIteration:
                 return self.journal
-            fut = pool.submit(self._prepare, 0, first)
+            fut = pool.submit(self.prepare, 0, first)
             cycle = 0
             while fut is not None:
                 prep = fut.result()
                 nxt = next(it, None)
                 cycle += 1
-                fut = (pool.submit(self._prepare, cycle, nxt)
+                fut = (pool.submit(self.prepare, cycle, nxt)
                        if nxt is not None else None)
                 self._run_cycle(prep)
         return self.journal
@@ -616,8 +633,32 @@ class AssimilationEngine:
         t0 = time.perf_counter()
         x, background, hist, device_times = self._solve(prep)
         x = jax.block_until_ready(x)
+        self.complete_cycle(prep, x, background,
+                            solve_time=time.perf_counter() - t0,
+                            hist=hist, device_times=device_times)
+
+    def reset_clock(self) -> None:
+        """Restart the per-cycle wall-clock reference (``cycle_time`` of
+        the next completed cycle is measured from now) — what ``run``
+        does at stream start, exposed for external drivers admitting an
+        engine mid-flight."""
+        self._t_last = time.perf_counter()
+
+    def complete_cycle(self, prep: _Prepared, x, background,
+                       solve_time: float, hist=None,
+                       device_times=None) -> None:
+        """Journal a solved cycle and carry its analysis forward.
+
+        The reentrant tail of the cycle: callers that dispatch the solve
+        themselves (the fleet runner batches many engines' cycles into
+        one device program) hand the analysis back here with the solve
+        wall time they measured; ``run`` reaches it through
+        :meth:`_run_cycle`.  Must be called in cycle order per engine —
+        it consumes ``prep`` and publishes ``self.analysis`` for the next
+        cycle's :meth:`solve_input`."""
+        device_times = list(device_times) if device_times else []
+        x = jax.block_until_ready(x)
         now = time.perf_counter()
-        solve_time = now - t0
         # Measured wall time since the previous cycle completed — with
         # double buffering this is what the pipelining actually buys
         # (~max(pack, solve), not their sum).

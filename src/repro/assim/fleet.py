@@ -1,0 +1,157 @@
+"""Fleet-batched DD-KF solves: cohorts of same-shape cycle solves.
+
+The multi-tenant serving layer (:mod:`repro.assim.serving`) runs many
+independent assimilation streams through one device program.  This
+module owns the batching half of that story: given the rhs-injected
+:class:`~repro.core.ddkf.PackedDD` of one cycle from each of several
+streams, group them into *cohorts* of identical shape/solver
+configuration, pad each cohort to a quantized capacity, stack it on a
+leading problem axis and dispatch one :func:`~repro.core.ddkf.solve_fleet`
+call that advances every member a full cycle.
+
+Shape bucketing.  Two cycle solves may share a compiled program only if
+every static property matches: problem sizes ``(n, p, w, m)``, dtype,
+the local solver kernel, and the Schwarz loop's static knobs
+(``iters``, ``record_residuals``).  ``damping`` is a *traced* operand
+of the fleet program (kept out of the compilation key on purpose — it
+must also be numerically identical across members of one dispatch, so
+it stays in the cohort key).  :func:`cohort_key` hashes exactly this
+set; streams whose keys differ land in separate cohorts and separate
+compiles.  Under DyDD the per-subdomain width ``w`` of a stream changes
+whenever its boundaries move, so cohort membership is recomputed every
+fleet round from the cycle's actual packing — a freshly repartitioned
+stream simply migrates to whichever cohort its new shape lands in.
+
+Capacity quantization.  Compiles are bounded by rounding each cohort's
+batch up to ``k * 2**j`` (``k`` = fleet mesh axis size, 1 off-mesh):
+admission and retirement change the live member count every round, and
+without quantization each distinct count would trigger a fresh XLA
+compile.  Padding slots are copies of member 0 whose results are
+discarded — numerically inert because :func:`~repro.core.ddkf.solve_fleet`
+maps ``solve_vmapped`` over the problem axis with ``lax.map``, so each
+member's op graph (and hence its bits) is independent of who else rides
+in the dispatch.  That independence is also what makes fleet results
+bitwise-identical to sequential per-engine solves — the property the
+determinism tests pin.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+import jax
+
+from repro.core import ddkf as ddkf_mod
+from repro.obs import meters as meters_mod
+from repro.obs import trace as trace_mod
+
+
+def cohort_key(packed: "ddkf_mod.PackedDD", iters: int, damping: float,
+               record_residuals: bool) -> tuple:
+    """Hashable bucket id: everything that must match for two cycle
+    solves to share one stacked dispatch (shapes + static solver config
+    + damping, which is traced but must agree numerically)."""
+    return (packed.n, packed.p, packed.w, packed.m,
+            str(packed.A_loc.dtype), packed.solve_kernel,
+            packed.solve_block, int(iters), float(damping),
+            bool(record_residuals))
+
+
+def quantize_capacity(size: int, mult: int = 1) -> int:
+    """Smallest ``mult * 2**j >= size`` — the padded batch the cohort
+    compiles at, so live-count churn between rounds re-uses programs."""
+    if size < 1:
+        raise ValueError(f"cohort size must be >= 1 (got {size})")
+    cap = max(int(mult), 1)
+    while cap < size:
+        cap *= 2
+    return cap
+
+
+@dataclasses.dataclass
+class CohortResult:
+    """One batched dispatch's outputs, unstacked per member."""
+
+    xs: List[jax.Array]                  # per-member analysis states
+    hists: List[Optional[jax.Array]]     # per-member residual histories
+    solve_time: float                    # wall time of the whole dispatch
+    capacity: int                        # padded batch size compiled at
+    size: int                            # live members in the dispatch
+
+
+class CohortSolver:
+    """Dispatches cohorts of rhs-injected packings through
+    :func:`~repro.core.ddkf.solve_fleet`.
+
+    ``mesh``/``axis`` select the sharded fleet path (members spread over
+    the mesh axis, ``lax.map`` within each device); without a mesh the
+    whole stacked batch runs on one device.  The solver is stateless
+    apart from telemetry — jit caching lives in :mod:`repro.core.ddkf`.
+    """
+
+    def __init__(self, mesh=None, axis: str = "fleet"):
+        self.mesh = mesh
+        self.axis = axis
+        self.mult = int(mesh.shape[axis]) if mesh is not None else 1
+        # Per-key pinned capacity (monotone): round-to-round thread
+        # timing shifts cohort sizes, and letting the capacity float
+        # with each round's size would compile a fresh stacked program
+        # per (shape, capacity) combination.  Pinning to the max
+        # quantized size seen keeps one live program per shape.
+        self._caps: Dict[tuple, int] = {}
+
+    def solve(self, key: tuple,
+              packs: Sequence["ddkf_mod.PackedDD"]) -> CohortResult:
+        """Run one cohort (all members sharing ``key``) to completion."""
+        (_, _, _, _, _, _, _, iters, damping, record_residuals) = key
+        size = len(packs)
+        cap = max(quantize_capacity(size, self.mult),
+                  self._caps.get(key, 1))
+        self._caps[key] = cap
+        m = meters_mod.get_meters()
+        with trace_mod.span("fleet.cohort", size=size, capacity=cap,
+                            n=key[0], p=key[1], w=key[2]) as sp:
+            t0 = time.perf_counter()
+            if cap == 1:
+                # Singleton off-mesh: skip the stack and ride the plain
+                # per-problem program — the very same jit cache the
+                # sequential engine path warms (bitwise-identical by the
+                # lax.map invariant), so a fragmented round (every
+                # stream in its own shape bucket) compiles nothing new.
+                out = ddkf_mod.solve_vmapped(
+                    packs[0], iters=iters, damping=damping,
+                    residual_history=record_residuals)
+                x = out[0][None] if record_residuals else out[None]
+                hist = out[1][None] if record_residuals else None
+            else:
+                padded = list(packs) + [packs[0]] * (cap - size)
+                stacked = ddkf_mod.stack_packed(padded)
+                out = ddkf_mod.solve_fleet(
+                    stacked, iters=iters, damping=damping,
+                    residual_history=record_residuals,
+                    mesh=self.mesh, axis=self.axis)
+                x = out[0] if record_residuals else out
+                hist = out[1] if record_residuals else None
+            sp.fence(x)
+            solve_time = time.perf_counter() - t0
+        m.inc("fleet.cohort.dispatches")
+        m.inc("fleet.cohort.members", size)
+        m.inc("fleet.cohort.padded_slots", cap - size)
+        m.observe("fleet.cohort.solve_time", solve_time)
+        xs = [x[i] for i in range(size)]
+        hists = ([hist[i] for i in range(size)] if record_residuals
+                 else [None] * size)
+        return CohortResult(xs=xs, hists=hists, solve_time=solve_time,
+                            capacity=cap, size=size)
+
+
+def group_cohorts(items: Sequence[Tuple[tuple, object]]
+                  ) -> Dict[tuple, List[object]]:
+    """Bucket ``(key, member)`` pairs by key, preserving arrival order
+    within each cohort (the order members are unstacked back out in)."""
+    groups: Dict[tuple, List[object]] = {}
+    for key, member in items:
+        groups.setdefault(key, []).append(member)
+    return groups

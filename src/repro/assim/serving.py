@@ -1,0 +1,234 @@
+"""Multi-tenant assimilation serving: N streams, one device program.
+
+:class:`FleetServer` runs many independent :class:`AssimilationEngine`
+streams concurrently by batching their per-cycle DD-KF solves into
+cohort dispatches (:mod:`repro.assim.fleet`) while host-side cycle
+preparation runs on a thread pool — the single-engine double-buffering
+generalized to a fleet:
+
+* **Continuous batching.**  Streams are submitted to the shared
+  :class:`~repro.runtime.scheduler.SlotScheduler`; up to ``max_active``
+  are in flight at once, the rest queue FIFO.  A stream retires the
+  moment its observation stream is exhausted and its slot is re-filled
+  on the next round — admission and retirement never recompile anything
+  (cohort capacities are quantized, so the batched programs are reused
+  across membership churn).
+
+* **Fleet rounds.**  Each round collects every stream whose host-side
+  ``prepare`` has finished, immediately pipelines that stream's *next*
+  ``prepare`` onto the pool, injects the carried background
+  (``solve_input``), buckets the resulting packings into shape cohorts
+  and dispatches each cohort as one stacked solve.  Streams whose
+  preparation is still running are simply not in this round — nobody
+  waits for the slowest tenant.
+
+* **Per-stream DyDD isolation.**  A stream whose rebalance trigger
+  fires does its repartition + repack inside ``prepare`` on a pool
+  thread, concurrent with other streams' device solves.  Its changed
+  subdomain widths move it to a different cohort on its next round;
+  the other streams' cohorts (and compiled programs) are untouched.
+
+Per-stream results are **bitwise identical** to running each engine's
+``run`` loop sequentially: the fleet path maps the very same
+``solve_vmapped`` program over the problem axis with ``lax.map``
+(see :func:`repro.core.ddkf.solve_fleet`), and all engine state
+transitions go through the same ``prepare → solve_input →
+complete_cycle`` methods in the same per-stream order.
+"""
+from __future__ import annotations
+
+import time
+from concurrent.futures import FIRST_COMPLETED, ThreadPoolExecutor, wait
+from typing import Callable, Dict, Iterable, Optional
+
+from repro.assim import fleet as fleet_mod
+from repro.assim.engine import AssimilationEngine, EngineConfig
+from repro.assim.metrics import Journal
+from repro.obs import meters as meters_mod
+from repro.obs import trace as trace_mod
+from repro.runtime.scheduler import SlotScheduler
+
+
+class _StreamState:
+    """One tenant: an engine, its observation iterator, and the in-flight
+    ``prepare`` future (at most one per engine, ever)."""
+
+    def __init__(self, sid, engine: AssimilationEngine, stream: Iterable):
+        self.sid = sid
+        self.engine = engine
+        self.it = iter(stream)
+        self.slot: Optional[int] = None
+        self.fut = None               # in-flight prepare future
+        self.exhausted = False        # iterator has run dry
+        self.cycles = 0
+
+
+class FleetServer:
+    """Continuous-batching server for assimilation streams.
+
+    Usage::
+
+        server = FleetServer(max_active=64)
+        for i in range(256):
+            server.add_stream(f"s{i}", EngineConfig(n=48, p=4),
+                              streams.make_stream("drifting_swarm", 120, 8,
+                                                  seed=i))
+        journals = server.serve()          # {sid: Journal}
+
+    ``mesh``/``mesh_axis`` spread cohort batches over a device mesh axis
+    (e.g. an 8-device ``("fleet",)`` mesh); cohort sizes are padded to a
+    multiple of the axis size automatically.  Only ``solver="vmapped"``
+    engines can ride a fleet — the shardmap solver owns whole devices
+    per subdomain and cannot be stacked.
+    """
+
+    def __init__(self, mesh=None, mesh_axis: str = "fleet",
+                 max_active: Optional[int] = None, pack_workers: int = 4,
+                 gather_window: float = 0.02, solver=None):
+        if pack_workers < 1:
+            raise ValueError(f"pack_workers must be >= 1 "
+                             f"(got {pack_workers})")
+        if gather_window < 0:
+            raise ValueError(f"gather_window must be >= 0 "
+                             f"(got {gather_window})")
+        self.gather_window = gather_window
+        self.scheduler = SlotScheduler(capacity=max_active,
+                                       meters_prefix="fleet.")
+        # An explicit solver carries its pinned cohort capacities (and
+        # the jit caches keyed off them) across server lifetimes — a
+        # long-running service or a benchmark's warmup passes hand the
+        # same CohortSolver to each successive server.
+        self.solver = solver if solver is not None \
+            else fleet_mod.CohortSolver(mesh=mesh, axis=mesh_axis)
+        self.pack_workers = pack_workers
+        self.journals: Dict[object, Journal] = {}
+        self.engines: Dict[object, AssimilationEngine] = {}
+        self._sids: set = set()
+        self.stats: Dict[str, float] = {}
+
+    # -- stream intake -----------------------------------------------------
+
+    def add_stream(self, sid, config: EngineConfig,
+                   stream: Iterable, *,
+                   forecast: Optional[Callable] = None,
+                   domain=None) -> None:
+        """Queue one assimilation stream (engine built here, started at
+        admission).  ``sid`` keys the returned journal and must be
+        unique."""
+        if sid in self._sids:
+            raise ValueError(f"duplicate stream id {sid!r}")
+        if config.solver != "vmapped":
+            raise ValueError(
+                f"fleet serving requires solver='vmapped' (stream "
+                f"{sid!r} asked for {config.solver!r}); the shardmap "
+                f"solver dedicates one device per subdomain and cannot "
+                f"be batched on a problem axis")
+        self._sids.add(sid)
+        engine = AssimilationEngine(config, forecast=forecast,
+                                    domain=domain)
+        self.engines[sid] = engine
+        self.scheduler.submit(_StreamState(sid, engine, stream))
+
+    # -- serving loop ------------------------------------------------------
+
+    def _admit(self, pool: ThreadPoolExecutor) -> None:
+        """Fill free slots from the queue; kick off each newcomer's first
+        ``prepare``.  Empty streams retire immediately (their journal is
+        the empty journal)."""
+        for slot, st in self.scheduler.admit():
+            st.slot = slot
+            st.engine.reset_clock()
+            first = next(st.it, None)
+            if first is None:
+                st.exhausted = True
+                self.journals[st.sid] = st.engine.journal
+                self.scheduler.retire(slot)
+                continue
+            st.fut = pool.submit(st.engine.prepare, 0, first)
+
+    def serve(self) -> Dict[object, Journal]:
+        """Run every queued stream to exhaustion; returns the per-stream
+        journals keyed by sid."""
+        m = meters_mod.get_meters()
+        t_start = time.perf_counter()
+        rounds = 0
+        with ThreadPoolExecutor(max_workers=self.pack_workers,
+                                thread_name_prefix="pack") as pool:
+            self._admit(pool)
+            while not self.scheduler.idle():
+                active = list(self.scheduler.active().values())
+                in_flight = [st.fut for st in active if st.fut is not None]
+                ready = [st for st in active
+                         if st.fut is not None and st.fut.done()]
+                if not ready:
+                    wait(in_flight, return_when=FIRST_COMPLETED)
+                elif len(ready) < len(in_flight) and self.gather_window:
+                    # Gather window: give stragglers a short grace to
+                    # join this round — fuller rounds mean larger (and
+                    # more repeatable) cohorts, hence fewer dispatches
+                    # and fewer distinct compiled capacities.  A stream
+                    # mid-DyDD-repack that misses the window simply
+                    # rides the next round; nobody blocks on it.
+                    wait(in_flight, timeout=self.gather_window)
+                ready = [st for st in active
+                         if st.fut is not None and st.fut.done()]
+                if not ready:
+                    continue
+
+                # Claim finished preps; pipeline each stream's next
+                # prepare onto the pool *before* this round's solve so
+                # host packing overlaps device work (the engine's
+                # double-buffering, fleet-wide).
+                items = []
+                for st in ready:
+                    prep = st.fut.result()
+                    st.fut = None
+                    nxt = next(st.it, None)
+                    if nxt is not None:
+                        st.fut = pool.submit(st.engine.prepare,
+                                             prep.cycle + 1, nxt)
+                    else:
+                        st.exhausted = True
+                    if prep.repartitioned:
+                        # DyDD isolation: note the repack; the stream's
+                        # new shape re-buckets it below without touching
+                        # anyone else's cohort.
+                        m.event("fleet.dydd.repack", sid=st.sid,
+                                cycle=prep.cycle, migrated=prep.migrated)
+                    packed, background = st.engine.solve_input(prep)
+                    cfg = st.engine.cfg
+                    key = fleet_mod.cohort_key(packed, cfg.iters,
+                                               cfg.damping,
+                                               cfg.record_residuals)
+                    items.append((key, (st, prep, packed, background)))
+
+                with trace_mod.span("fleet.round", round=rounds,
+                                    streams=len(items)):
+                    for key, members in fleet_mod.group_cohorts(
+                            items).items():
+                        res = self.solver.solve(
+                            key, [pk for (_, _, pk, _) in members])
+                        for (st, prep, _, background), x, hist in zip(
+                                members, res.xs, res.hists):
+                            st.engine.complete_cycle(
+                                prep, x, background,
+                                solve_time=res.solve_time, hist=hist)
+                            st.cycles += 1
+                rounds += 1
+                m.inc("fleet.rounds")
+
+                for st in ready:
+                    if st.exhausted and st.fut is None:
+                        self.journals[st.sid] = st.engine.journal
+                        self.scheduler.retire(st.slot)
+                self._admit(pool)
+
+        wall = time.perf_counter() - t_start
+        total_cycles = sum(len(j) for j in self.journals.values())
+        self.stats = {"wall_time": wall, "rounds": rounds,
+                      "streams": len(self.journals),
+                      "cycles": total_cycles,
+                      "cycles_per_sec": (total_cycles / wall if wall
+                                         else 0.0)}
+        m.gauge("fleet.cycles_per_sec", self.stats["cycles_per_sec"])
+        return self.journals

@@ -432,6 +432,116 @@ def gather_local(packed: PackedDD, x_glob: jax.Array) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
+# Fleet path: independent *problems* on a leading batch axis.
+# ---------------------------------------------------------------------------
+
+def stack_packed(packs) -> PackedDD:
+    """Stack same-shape packings onto a leading *problem* axis.
+
+    Every data field gains a leading axis of size ``len(packs)`` (the
+    fleet/cohort axis); the meta fields — which must agree exactly across
+    the stack, including the resolved ``solve_kernel``/``solve_block`` —
+    are carried through unchanged.  The result is what
+    :func:`solve_fleet` consumes: one device dispatch advancing every
+    problem in the cohort.
+
+    Shape agreement is a *cohort key* responsibility of the caller
+    (``repro.assim.fleet`` buckets streams by it); a mismatch here is a
+    programming error and raises.
+    """
+    packs = list(packs)
+    if not packs:
+        raise ValueError("stack_packed needs at least one packing")
+    ref = packs[0]
+    key0 = (ref.n, ref.p, ref.w, ref.m, ref.solve_kernel, ref.solve_block,
+            ref.A_loc.dtype)
+    for pk in packs[1:]:
+        key = (pk.n, pk.p, pk.w, pk.m, pk.solve_kernel, pk.solve_block,
+               pk.A_loc.dtype)
+        if key != key0:
+            raise ValueError(
+                f"cannot stack packings with different shapes/kernels: "
+                f"{key} vs {key0} — bucket them into separate cohorts")
+    # One jitted dispatch for all ~12 field stacks (cached per pytree
+    # structure/shape, i.e. per (cohort shape, capacity) — bounded by the
+    # serving layer's capacity quantization).  Eager per-field jnp.stack
+    # costs a device dispatch per field per round, which dominated the
+    # fleet's round overhead.
+    return _stack_jit(tuple(packs))
+
+
+@jax.jit
+def _stack_jit(packs):
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *packs)
+
+
+@partial(jax.jit, static_argnames=("iters", "residual_history"))
+def _solve_fleet_map(stacked: PackedDD, iters: int, damping,
+                     residual_history: bool):
+    return jax.lax.map(
+        lambda pk: solve_vmapped(pk, iters=iters, damping=damping,
+                                 residual_history=residual_history),
+        stacked)
+
+
+def _fleet_sharded_fn(mesh, axis: str, iters: int, residual_history: bool):
+    """Jitted shard_map of the per-problem sweep over the fleet mesh axis
+    (cached per (mesh, axis, iters, residual_history) — mesh objects
+    hash)."""
+    key = (mesh, axis, iters, residual_history)
+    fn = _FLEET_SHARDED_CACHE.get(key)
+    if fn is not None:
+        return fn
+
+    def body(pk, damping):
+        return jax.lax.map(
+            lambda q: solve_vmapped(q, iters=iters, damping=damping,
+                                    residual_history=residual_history),
+            pk)
+
+    fn = jax.jit(_compat.shard_map(
+        body, mesh=mesh, in_specs=(P(axis), P()), out_specs=P(axis)))
+    _FLEET_SHARDED_CACHE[key] = fn
+    return fn
+
+
+_FLEET_SHARDED_CACHE: dict = {}
+
+
+def solve_fleet(stacked: PackedDD, iters: int = 60, damping: float = 1.0,
+                residual_history: bool = False, mesh=None,
+                axis: str = "fleet"):
+    """Advance every problem of a stacked cohort one solve in one dispatch.
+
+    The per-problem sweep is ``lax.map`` over the leading problem axis —
+    each problem executes the *identical op graph* as a standalone
+    :func:`solve_vmapped` call, so the fleet results are **bitwise
+    identical** to per-problem solves (an extra ``vmap`` axis would
+    reassociate the matvec/triangular-solve reductions; ``lax.map`` does
+    not).  With ``mesh=`` the problem axis is additionally sharded over
+    the ``axis`` mesh axis via ``shard_map`` — one slice of the cohort
+    per device, still ``lax.map`` inside, still bitwise — which is where
+    the fleet throughput comes from on real multi-core/multi-device
+    hardware (the cohort size must divide evenly; the serving layer pads
+    cohorts with dummy slots to the mesh multiple).
+
+    Returns the (S, n) stacked estimates, or ``(x, hist)`` with ``hist``
+    of shape (S, iters) under ``residual_history=True``.
+    """
+    if mesh is None:
+        return _solve_fleet_map(stacked, iters=iters, damping=damping,
+                                residual_history=residual_history)
+    k = int(mesh.shape[axis])
+    S = int(stacked.A_loc.shape[0])
+    if S % k:
+        raise ValueError(
+            f"cohort size {S} does not divide over the {k}-device "
+            f"'{axis}' mesh axis — pad the cohort to a multiple of {k}")
+    fn = _fleet_sharded_fn(mesh, axis, iters, residual_history)
+    return fn(stacked, damping)
+
+
+# ---------------------------------------------------------------------------
 # Production path: subdomains sharded over a mesh axis.
 # ---------------------------------------------------------------------------
 

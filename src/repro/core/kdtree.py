@@ -20,11 +20,14 @@ migration volume is counted rank-by-rank against the previous leaf
 assignment, exactly like the 1D/2D DyDD movement accounting.
 
 Cut planes are placed at the midpoint of *distinct* consecutive order
-statistics nearest the target quantile, so a cut never coincides with an
-observation coordinate — the tie-dumping failure of the pre-fix
-``dydd.migrate_1d`` cannot occur by construction (a tie group is kept
-whole on one side; the realized loads deviate from the targets by at
-most the tie-group mass).
+statistics nearest the target quantile, then snapped to the nearest
+mesh line (``k / nx`` or ``k / ny``) so leaf rectangles tile whole
+raster cells and col_sets align exactly with raster columns.  Ties on a
+cut (possible when observation coordinates are themselves quantized to
+mesh lines) are kept whole on one side by consistent half-open
+semantics, so the tie-dumping failure of the pre-fix ``dydd.migrate_1d``
+cannot occur (the realized loads deviate from the targets by at most the
+tie-group mass plus the snap quantization).
 
 The processor graph is the leaf face-adjacency graph — irregular, not a
 grid — which is precisely what exercises the graph-general
@@ -101,11 +104,23 @@ class KDTreeDomain:
         return centers[(centers >= lo) & (centers < hi)]
 
     def _choose_cut(self, rect, pts: np.ndarray, axis: int,
-                    q: float) -> float:
-        """Cut plane along ``axis`` at the q-quantile of ``pts`` — placed
-        at the midpoint of the nearest *distinct* consecutive order
-        statistics (never on an observation coordinate), clamped so each
-        side keeps at least one mesh cell whenever the rectangle has two."""
+                    q: float) -> tuple:
+        """(cut plane, split error) along ``axis`` near the q-quantile of
+        ``pts``, **snapped to a mesh line** ``k / nx`` (or ``k / ny``) so
+        every leaf rectangle tiles whole raster cells and the col_sets
+        align exactly with raster columns.  Among the valid lines (each
+        side keeps >= 1 mesh cell) the one whose half-open point split
+        lands closest to the target quantile wins (NOT the line nearest
+        the unsnapped median: on a dense band that can shed a whole
+        column's mass to one side), ties to the leftmost line.  The
+        returned error ``|#left - q·#pts|`` is what :meth:`_build` uses
+        to pick the split *axis*.  A snapped cut can coincide with a
+        grid-quantized observation coordinate; ownership and the build's
+        split mask are both half-open (``pts < cut`` goes left), so a tie
+        group on the line is kept whole on the right side — consistent
+        between counting and building, no tie dumping.  Rectangles with a
+        single cell along ``axis`` fall back to an unsnapped cut at the
+        order-statistics midpoint (kept off observation coordinates)."""
         lo, hi = (rect[0], rect[1]) if axis == 0 else (rect[2], rect[3])
         v = np.sort(pts[:, axis])
         cut = lo + q * (hi - lo)            # geometric fallback
@@ -115,13 +130,27 @@ class KDTreeDomain:
             if gaps.size:
                 g = int(gaps[np.argmin(np.abs(gaps - c))])
                 cut = 0.5 * (v[g - 1] + v[g])
+        nmesh = self.nx if axis == 0 else self.ny
         cells = self._cells_in(lo, hi, axis)
         if cells.size >= 2:
-            # keep >= 1 cell per side: cut in (cells[0], cells[-1]]
-            cut = min(max(cut, np.nextafter(cells[0], 1.0)),
-                      float(cells[-1]))
-        return float(np.clip(cut, np.nextafter(lo, 1.0),
-                             np.nextafter(hi, 0.0)))
+            # Valid snap lines: the first cell has index
+            # round(cells[0] * nmesh - 0.5), and a cut at line k leaves
+            # cells [..k-1] left, [k..] right — k spans (first+1) .. last.
+            first = int(round(cells[0] * nmesh - 0.5))
+            last = int(round(cells[-1] * nmesh - 0.5))
+            ks = np.arange(first + 1, last + 1, dtype=np.int64)
+            if v.size >= 2:
+                lefts = np.searchsorted(v, ks / nmesh, side="left")
+                errs = np.abs(lefts - q * v.size)
+                i = int(np.argmin(errs))
+                return ks[i] / nmesh, float(errs[i])
+            k = int(np.clip(round(cut * nmesh), first + 1, last))
+            return k / nmesh, 0.0
+        cut = float(np.clip(cut, np.nextafter(lo, 1.0),
+                            np.nextafter(hi, 0.0)))
+        err = (float(abs(np.searchsorted(v, cut, side="left")
+                         - q * v.size)) if v.size else 0.0)
+        return cut, err
 
     def _build(self, pts: np.ndarray, targets: np.ndarray) -> np.ndarray:
         """Leaf rectangles from recursive median splits, leaf-id order.
@@ -141,16 +170,30 @@ class KDTreeDomain:
             kl = (k + 1) // 2
             tot = int(targets.sum())
             q = (float(targets[:kl].sum()) / tot) if tot > 0 else kl / k
-            # Split along the axis with more mesh cells (anisotropy-aware
-            # tie-break on geometric extent, then x).
+            # Candidate axes: any with >= 2 mesh cells (a snappable cut);
+            # if neither qualifies, fall back to the historic cell-count
+            # heuristic on whichever axis has more.  Among candidates the
+            # split with the smaller quantile error wins — on a snapped
+            # mesh the nominally "longer" axis can only offer coarse
+            # splits (a dense diagonal band sheds a whole column's mass),
+            # while the other axis may land nearly exactly on target.
+            # Ties: more cells, then the x axis (deterministic).
             ncx = self._cells_in(rect[0], rect[1], 0).size
             ncy = self._cells_in(rect[2], rect[3], 1).size
-            if ncx != ncy:
-                axis = 0 if ncx > ncy else 1
-            else:
-                axis = 0 if (rect[1] - rect[0]) >= (rect[3] - rect[2]) \
-                    else 1
-            cut = self._choose_cut(rect, pts, axis, q)
+            axes = [a for a, nc in ((0, ncx), (1, ncy)) if nc >= 2]
+            if not axes:
+                if ncx != ncy:
+                    axes = [0 if ncx > ncy else 1]
+                else:
+                    axes = [0 if (rect[1] - rect[0])
+                            >= (rect[3] - rect[2]) else 1]
+            best = None
+            for a in axes:
+                cut_a, err_a = self._choose_cut(rect, pts, a, q)
+                key = (err_a, -(ncx if a == 0 else ncy), a)
+                if best is None or key < best[0]:
+                    best = (key, a, cut_a)
+            _, axis, cut = best
             if axis == 0:
                 left = (rect[0], cut, rect[2], rect[3])
                 right = (cut, rect[1], rect[2], rect[3])

@@ -1,14 +1,21 @@
 """Serving driver: batched prefill + decode with static-shape KV caches.
 
-A minimal continuous-batching scheduler: requests arrive with different
-prompt lengths; prompts are left-padded into the prefill batch, decode
-proceeds lock-step with per-row stop handling.  On TPU the same loop runs
-under the production mesh with the cache shardings from
-``runtime.steps.make_serve_step`` (kv-head TP or cache sequence sharding).
+Requests arrive with different prompt lengths; prompts are left-padded
+into the prefill batch, decode proceeds lock-step with per-row stop
+handling.  On TPU the same loop runs under the production mesh with the
+cache shardings from ``runtime.steps.make_serve_step`` (kv-head TP or
+cache sequence sharding).
+
+Queueing is delegated to the shared continuous-batching
+:class:`~repro.runtime.scheduler.SlotScheduler` (the same table the
+assimilation fleet runs on): ``serve_queue`` admits up to ``slots``
+requests per wave, runs the wave to completion with ``serve_batch``,
+retires every slot and admits the next wave — so an open-ended request
+stream runs under a bounded decode batch.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch gemma3-1b --smoke \
-      --batch 4 --prompt-len 32 --max-new 16
+      --batch 4 --prompt-len 32 --max-new 16 [--slots 2]
 """
 from __future__ import annotations
 
@@ -23,6 +30,7 @@ import jax.numpy as jnp
 from repro import configs
 from repro.models import transformer
 from repro.runtime import steps as steps_mod
+from repro.runtime.scheduler import SlotScheduler
 
 
 @dataclasses.dataclass
@@ -83,6 +91,40 @@ def serve_batch(cfg, params, requests, *, max_seq: int, greedy: bool = True,
     return requests, stats
 
 
+def serve_queue(cfg, params, requests, *, slots: int, max_seq: int,
+                greedy: bool = True, seed: int = 0, mesh=None):
+    """Run an unbounded request list through a bounded decode batch.
+
+    Requests are parked on a :class:`SlotScheduler` of ``slots`` slots
+    and served in FIFO waves: admit up to ``slots``, run the wave with
+    :func:`serve_batch`, retire, repeat until the queue drains.  Returns
+    the completed requests (arrival order) and aggregate stats.
+    """
+    sched = SlotScheduler(capacity=slots, meters_prefix="serve.")
+    for r in requests:
+        sched.submit(r)
+    done = []
+    waves = 0
+    agg = {"prefill_s": 0.0, "decode_s": 0.0}
+    while not sched.idle():
+        wave = sched.admit()
+        batch = [r for _, r in wave]
+        batch, stats = serve_batch(cfg, params, batch, max_seq=max_seq,
+                                   greedy=greedy, seed=seed + waves,
+                                   mesh=mesh)
+        for slot, _ in wave:
+            sched.retire(slot)
+        done.extend(batch)
+        agg["prefill_s"] += stats["prefill_s"]
+        agg["decode_s"] += stats["decode_s"]
+        waves += 1
+    total_new = sum(len(r.out) for r in done)
+    agg["waves"] = waves
+    agg["tokens_per_s"] = (total_new / agg["decode_s"]
+                           if agg["decode_s"] else 0.0)
+    return done, agg
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -91,6 +133,9 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--slots", type=int, default=0,
+                    help="decode-batch slot count (0 = one wave of "
+                         "--batch requests, no queueing)")
     args = ap.parse_args()
 
     cfg = (configs.get_smoke_config(args.arch) if args.smoke
@@ -103,8 +148,12 @@ def main():
                                         dtype=np.int64).astype(np.int32),
                     max_new=args.max_new)
             for i in range(args.batch)]
-    reqs, stats = serve_batch(cfg, params, reqs,
-                              max_seq=args.prompt_len + args.max_new)
+    if args.slots > 0:
+        reqs, stats = serve_queue(cfg, params, reqs, slots=args.slots,
+                                  max_seq=args.prompt_len + args.max_new)
+    else:
+        reqs, stats = serve_batch(cfg, params, reqs,
+                                  max_seq=args.prompt_len + args.max_new)
     for r in reqs:
         print(f"req {r.rid}: prompt[{len(r.prompt)}] -> {r.out[:8]}...")
     print(f"prefill {stats['prefill_s']:.3f}s decode {stats['decode_s']:.3f}s "

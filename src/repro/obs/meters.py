@@ -35,6 +35,7 @@ Meter name taxonomy (dotted, subsystem-first) — the full list lives in
 from __future__ import annotations
 
 import json
+import threading
 import time
 from collections import defaultdict
 from typing import Optional
@@ -43,10 +44,13 @@ import numpy as np
 
 
 class Meters:
-    """A counters/gauges/series/events registry (thread-compatible: every
-    mutation is a single dict/list op under the GIL)."""
+    """A counters/gauges/series/events registry (thread-safe: one lock
+    serializes every mutation and export — the serving layer's packing
+    pool has many host threads reporting concurrently, and a read-modify-
+    write like ``counters[name] += value`` is not atomic under the GIL)."""
 
     def __init__(self):
+        self._lock = threading.Lock()
         self.counters: dict = defaultdict(float)
         self.gauges: dict = {}
         self.series: dict = defaultdict(list)
@@ -55,39 +59,48 @@ class Meters:
     # -- instruments --------------------------------------------------------
 
     def inc(self, name: str, value: float = 1.0) -> None:
-        self.counters[name] += value
+        with self._lock:
+            self.counters[name] += value
 
     def gauge(self, name: str, value: float) -> None:
-        self.gauges[name] = float(value)
+        with self._lock:
+            self.gauges[name] = float(value)
 
     def observe(self, name: str, value: float) -> None:
-        self.series[name].append(float(value))
+        with self._lock:
+            self.series[name].append(float(value))
 
     def extend(self, name: str, values) -> None:
-        self.series[name].extend(float(v) for v in values)
+        vals = [float(v) for v in values]
+        with self._lock:
+            self.series[name].extend(vals)
 
     def event(self, name: str, **payload) -> None:
-        self.events.append({"name": name, "t": time.time(), **payload})
+        rec = {"name": name, "t": time.time(), **payload}
+        with self._lock:
+            self.events.append(rec)
 
     # -- export -------------------------------------------------------------
 
     def snapshot(self) -> dict:
         """JSON-serializable view of everything recorded so far."""
-        return {
-            "counters": dict(self.counters),
-            "gauges": dict(self.gauges),
-            "series": {k: list(v) for k, v in self.series.items()},
-            "events": [dict(e) for e in self.events],
-        }
+        with self._lock:
+            return {
+                "counters": dict(self.counters),
+                "gauges": dict(self.gauges),
+                "series": {k: list(v) for k, v in self.series.items()},
+                "events": [dict(e) for e in self.events],
+            }
 
     def to_json(self, **kw) -> str:
         return json.dumps(self.snapshot(), **kw)
 
     def reset(self) -> None:
-        self.counters.clear()
-        self.gauges.clear()
-        self.series.clear()
-        self.events.clear()
+        with self._lock:
+            self.counters.clear()
+            self.gauges.clear()
+            self.series.clear()
+            self.events.clear()
 
 
 _ACTIVE = Meters()

@@ -110,11 +110,28 @@ _DEFAULT_SIZES = {"pod": 2, "data": 16, "model": 16}
 
 
 def _mesh_axis_sizes():
-    """{axis: size} of the ambient mesh, or None outside any mesh."""
-    mesh = jax.sharding.get_abstract_mesh()
-    if mesh is None or mesh.empty:
-        return None
-    return dict(zip(mesh.axis_names, mesh.axis_sizes))
+    """{axis: size} of the ambient mesh, or None outside any mesh.
+
+    Version-portable: the public ``jax.sharding.get_abstract_mesh``
+    (jax >= 0.5) when it exists; on older jax the private
+    ``jax._src.mesh.get_abstract_mesh`` (whose unset value is a bare
+    config sentinel, not a mesh) and, failing that, the classic
+    ``thread_resources`` physical mesh a ``with mesh:`` block installs.
+    """
+    fn = getattr(jax.sharding, "get_abstract_mesh", None)
+    if fn is not None:
+        mesh = fn()
+        if mesh is None or mesh.empty:
+            return None
+        return dict(zip(mesh.axis_names, mesh.axis_sizes))
+    from jax._src import mesh as _mesh_src
+    mesh = _mesh_src.get_abstract_mesh()
+    if hasattr(mesh, "axis_names") and not getattr(mesh, "empty", False):
+        return dict(zip(mesh.axis_names, mesh.axis_sizes))
+    phys = getattr(_mesh_src.thread_resources.env, "physical_mesh", None)
+    if phys is not None and not phys.empty:
+        return {k: int(v) for k, v in phys.shape.items()}
+    return None
 
 
 def _resolve(axes, rules, sizes, shape=None):

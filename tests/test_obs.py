@@ -180,6 +180,40 @@ def test_meters_counters_series_events(fresh_meters):
     assert not m.counters and not m.series and not m.events
 
 
+def test_meters_thread_hammer(fresh_meters):
+    """Concurrent inc/observe/event from many threads lose nothing: the
+    registry serializes every mutation behind one lock (``counters[k] +=
+    v`` is a read-modify-write, not atomic under the GIL), which is what
+    lets the fleet's packing pool and serving loop share one Meters."""
+    m = fresh_meters
+    threads, per = 8, 500
+    barrier = threading.Barrier(threads)
+
+    def hammer(tid):
+        barrier.wait()
+        for i in range(per):
+            m.inc("h.count")
+            m.inc("h.weighted", 0.5)
+            m.observe("h.series", float(tid))
+            m.gauge(f"h.gauge.{tid}", i)
+            if i % 100 == 0:
+                m.event("h.event", tid=tid, i=i)
+
+    ts = [threading.Thread(target=hammer, args=(t,)) for t in range(threads)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    snap = m.snapshot()
+    assert snap["counters"]["h.count"] == threads * per
+    assert snap["counters"]["h.weighted"] == pytest.approx(
+        threads * per * 0.5)
+    assert len(snap["series"]["h.series"]) == threads * per
+    assert len(snap["events"]) == threads * (per // 100)
+    for t in range(threads):
+        assert snap["gauges"][f"h.gauge.{t}"] == per - 1
+
+
 def test_comm_matrix_symmetric_and_total():
     per_edge = {"0-1": 100.0, "1-2": 50.0}
     M = obs_meters.comm_matrix(3, per_edge)

@@ -125,6 +125,35 @@ def extract_metrics(bench: dict) -> dict:
                 f".fused_over_jnp_solve_ratio",
                 sc["kernel_compare"]["fused_over_jnp_solve_ratio"],
                 direction="max")
+    ch = bench.get("chaos", {})
+    for kind, row in ch.get("remesh_quality", {}).items():
+        # Deterministic given (stream, seed): the elastically re-derived
+        # tiling's first-cycle balance, and its ratio over a cold default
+        # tiling (the remesh path's whole reason to exist — one-sided:
+        # a better-balanced remesh is never a regression).
+        add(f"chaos.remesh_quality.{kind}.first_cycle_imbalance_elastic",
+            row["first_cycle_imbalance_elastic"])
+        add(f"chaos.remesh_quality.{kind}.elastic_over_cold",
+            row["elastic_over_cold"], direction="max")
+    if "fault_injection" in ch:
+        fi = ch["fault_injection"]
+        # Bitwise flags are 1.0-or-broken: zero tolerance, one-sided.
+        add("chaos.fault_injection.journal_bitwise",
+            fi["journal_bitwise"], tolerance=0.0, direction="min")
+        add("chaos.fault_injection.retries", fi["retries"])
+    if "resume" in ch:
+        add("chaos.resume.restore_bitwise",
+            ch["resume"]["restore_bitwise"], tolerance=0.0,
+            direction="min")
+    for cad, row in ch.get("snapshot_overhead", {}).items():
+        if cad == "baseline":
+            continue
+        # Snapshot cost as a share of the cycle (machine-normalized,
+        # like the phase ratios); host filesystem jitter makes this the
+        # noisiest chaos metric, hence the widest tolerance.
+        add(f"chaos.snapshot_overhead.{cad}.snapshot_over_cycle_ratio",
+            row["snapshot_over_cycle_ratio"], tolerance=1.0,
+            direction="max")
     for count, row in bench.get("fleet_counts", {}).items():
         # serving_bench reports: the fleet's whole reason to exist is
         # throughput over the sequential per-engine loop.  Gated as a

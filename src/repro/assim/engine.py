@@ -45,8 +45,11 @@ from repro.core import domain as domain_mod
 from repro.core import dydd as dydd_mod
 from repro.core import kdtree as kdtree_mod
 from repro.core import _compat as compat_mod
+from repro.checkpoint import manager as ckpt_mod
+from repro.kernels import ops as ops_mod
 from repro.obs import meters as meters_mod
 from repro.obs import trace as trace_mod
+from repro.runtime import chaos as chaos_mod
 from repro.runtime.straggler import StragglerConfig, StragglerMonitor
 from repro.assim import streams as streams_mod
 from repro.assim.metrics import CycleMetrics, Journal, imbalance_ratio
@@ -140,6 +143,11 @@ class EngineConfig:
                                       # "auto" (fused Pallas on TPU, jnp
                                       # elsewhere) | "jnp" | "fused" |
                                       # "fused_interpret" | "fused_ref"
+    solve_retries: int = 2            # bounded retry on a TransientFault
+                                      # from prepare/solve (exponential
+                                      # backoff); exceeding it is fatal.
+                                      # Retries are bitwise-safe: faults
+                                      # fire before any state mutation
 
 
 def _resolve_mesh_shape(cfg: EngineConfig) -> tuple:
@@ -176,6 +184,10 @@ def _domain_from_config(cfg: EngineConfig) -> domain_mod.Domain:
         return kdtree_mod.KDTreeDomain(nx=nx, ny=ny, p=cfg.p)
     raise ValueError(f"domain_kind must be 'interval', 'shelf' or "
                      f"'kdtree' (got {cfg.domain_kind!r})")
+
+
+# Checkpoint-tree key prefix for the domain's boundary-state arrays.
+_DOMAIN_PREFIX = "domain/"
 
 
 @dataclasses.dataclass
@@ -241,7 +253,8 @@ class AssimilationEngine:
                  forecast: Optional[Callable] = None,
                  mesh=None, mesh_axis=None,
                  domain: Optional[domain_mod.Domain] = None,
-                 straggler_config: Optional[StragglerConfig] = None):
+                 straggler_config: Optional[StragglerConfig] = None,
+                 chaos: "chaos_mod.ChaosInjector | None" = None):
         self.cfg = config
         self.forecast = forecast or (lambda x: x)
         if config.solver not in ("vmapped", "shardmap"):
@@ -289,6 +302,13 @@ class AssimilationEngine:
         # feeds monitor 0 the whole-solve time (one logical device).
         self._stragglers = [StragglerMonitor(straggler_config)
                             for _ in range(self.p)]
+        self._straggler_config = straggler_config
+        self._chaos = chaos
+        # The stream being consumed, when it exposes a serializable
+        # cursor (streams.ResumableStream) — what snapshot() records so
+        # resume can fast-forward the seeded generator.
+        self._stream = None
+        self._restored_cursor: Optional[dict] = None
 
     # -- mesh resolution for the sharded solver ----------------------------
 
@@ -402,6 +422,12 @@ class AssimilationEngine:
         engine mutates its domain/truth/rng state here, so at most one
         ``prepare`` per engine may be in flight at a time (the serving
         layer's packing pool enforces this per stream)."""
+        # Fault injection sits BEFORE any state mutation: a retried
+        # prepare after a TransientFault starts from identical rng/
+        # domain/truth state, so the retry is bitwise-equivalent to an
+        # uninjected run.
+        if self._chaos is not None:
+            self._chaos.check("pack", cycle)
         t0 = time.perf_counter()
         cfg = self.cfg
         obs = np.asarray(obs, dtype=np.float64)
@@ -533,6 +559,10 @@ class AssimilationEngine:
         (a straggler's shard-ready time is late under any ordering).
         """
         cfg = self.cfg
+        # The solve mutates no engine state until complete_cycle, so a
+        # fault raised here leaves the cycle cleanly retryable.
+        if self._chaos is not None:
+            self._chaos.check("solve", prep.cycle)
         packed, background = self.solve_input(prep)
         hist = None
         device_times: list = []
@@ -585,14 +615,48 @@ class AssimilationEngine:
 
     # -- driver -------------------------------------------------------------
 
-    def run(self, stream: Iterable[np.ndarray]) -> Journal:
-        """Consume the stream to exhaustion; returns the journal."""
+    def run(self, stream: Iterable[np.ndarray], *,
+            checkpoint_dir: str | None = None,
+            snapshot_every: int = 0) -> Journal:
+        """Consume the stream to exhaustion; returns the journal.
+
+        Resume-aware: cycle numbering continues from the journal (a
+        restored engine picks up at ``len(journal)``), and when the
+        stream exposes a ``cursor`` (:class:`streams.ResumableStream`)
+        it is recorded for :meth:`snapshot`.  With ``checkpoint_dir``
+        and ``snapshot_every=k``, an atomic engine checkpoint is saved
+        every k completed cycles — on those cycles the next cycle's
+        prepare (which mutates rng/domain/truth state) is *deferred*
+        until the snapshot is taken, so the saved state is exactly the
+        cycle boundary and resume is bitwise journal-continuing.
+        """
         cfg = self.cfg
+        self._stream = stream if hasattr(stream, "cursor") else None
         it = iter(stream)
+        base = len(self.journal.records)
         self._t_last = time.perf_counter()
+
+        def snap_due(cycle: int) -> bool:
+            return (checkpoint_dir is not None and snapshot_every > 0
+                    and (cycle + 1) % snapshot_every == 0)
+
+        def finish(prep: "_Prepared") -> None:
+            self._run_cycle(prep)
+            if snap_due(prep.cycle):
+                self.save_checkpoint(checkpoint_dir, step=prep.cycle + 1)
+            if self._chaos is not None:
+                # After the snapshot: a kill at cycle c resumes from a
+                # checkpoint no newer than c+1, never a torn mid-cycle.
+                self._chaos.maybe_kill("cycle_end", prep.cycle)
+
         if not cfg.double_buffer:
-            for cycle, obs in enumerate(it):
-                self._run_cycle(self.prepare(cycle, obs))
+            for i, obs in enumerate(it):
+                cycle = base + i
+                prep = chaos_mod.retry_transient(
+                    lambda: self.prepare(cycle, obs),
+                    retries=max(cfg.solve_retries, 0),
+                    site="pack", cycle=cycle)
+                finish(prep)
             return self.journal
 
         # Double-buffered: prepare cycle t+1 on the worker while the main
@@ -607,16 +671,49 @@ class AssimilationEngine:
                 first = next(it)
             except StopIteration:
                 return self.journal
-            fut = pool.submit(self.prepare, 0, first)
-            cycle = 0
+            fut = pool.submit(self.prepare, base, first)
+            pending = (base, first)
+            cycle = base
             while fut is not None:
-                prep = fut.result()
-                nxt = next(it, None)
+                prep = self._claim_prepare(fut, pool, *pending)
                 cycle += 1
-                fut = (pool.submit(self.prepare, cycle, nxt)
-                       if nxt is not None else None)
-                self._run_cycle(prep)
+                fut = None
+
+                def submit_next():
+                    nonlocal fut, pending
+                    nxt = next(it, None)
+                    if nxt is not None:
+                        pending = (cycle, nxt)
+                        fut = pool.submit(self.prepare, cycle, nxt)
+
+                if snap_due(prep.cycle):
+                    # Snapshot cycle: do NOT pipeline — the next prepare
+                    # would mutate rng/domain/truth before the save, and
+                    # the checkpoint would no longer be a cycle boundary.
+                    finish(prep)
+                    submit_next()
+                else:
+                    submit_next()
+                    finish(prep)
         return self.journal
+
+    def _claim_prepare(self, fut, pool, cycle: int, obs):
+        """Claim an in-flight prepare, retrying TransientFaults with
+        exponential backoff by resubmitting the same (cycle, obs) — safe
+        because injected pack faults fire before any state mutation."""
+        retries = max(self.cfg.solve_retries, 0)
+        for attempt in range(retries + 1):
+            try:
+                return fut.result()
+            except chaos_mod.TransientFault:
+                if attempt >= retries:
+                    raise
+                m = meters_mod.get_meters()
+                m.event("chaos.retry", site="pack", cycle=int(cycle),
+                        attempt=attempt + 1)
+                m.inc("chaos.retries")
+                time.sleep(0.05 * (2.0 ** attempt))
+                fut = pool.submit(self.prepare, cycle, obs)
 
     def run_scenario(self, name: str, m: int, cycles: int,
                      seed: int = 0, **kw) -> Journal:
@@ -631,7 +728,10 @@ class AssimilationEngine:
 
     def _run_cycle(self, prep: _Prepared) -> None:
         t0 = time.perf_counter()
-        x, background, hist, device_times = self._solve(prep)
+        x, background, hist, device_times = chaos_mod.retry_transient(
+            lambda: self._solve(prep),
+            retries=max(self.cfg.solve_retries, 0),
+            site="solve", cycle=prep.cycle)
         x = jax.block_until_ready(x)
         self.complete_cycle(prep, x, background,
                             solve_time=time.perf_counter() - t0,
@@ -676,6 +776,10 @@ class AssimilationEngine:
         # shardmap path; the vmapped solve is one logical device.
         if not device_times:
             device_times = [solve_time]
+        if self._chaos is not None:
+            # Forced straggler: inflate the scheduled device's *reported*
+            # time — the solve already happened, analyses stay bitwise.
+            device_times = self._chaos.straggle(prep.cycle, device_times)
         flags = [i for i, dt in enumerate(device_times)
                  if self._stragglers[i].record(dt)]
 
@@ -730,3 +834,130 @@ class AssimilationEngine:
                 prep.comm_mvec_axis_bytes_per_cycle),
             device_solve_times=[float(t) for t in device_times],
             straggler_flags=flags))
+
+    # -- checkpoint / resume ------------------------------------------------
+
+    SNAPSHOT_VERSION = 1
+
+    def snapshot(self) -> tuple:
+        """(tree, metadata) capturing everything resume needs.
+
+        Must be taken at a cycle boundary with no prepare in flight
+        (``run`` defers the pipelined next-prepare around snapshot
+        cycles).  The tree holds the array state (truth, carried
+        analysis, domain boundary state); the metadata holds the
+        JSON-side state: config, rng bit-generator state (exact — resume
+        re-draws the same truth walk and data noise), journal, stream
+        cursor, straggler EWMAs and the gram/schwarz autotune caches.
+        """
+        tree: dict = {"truth": np.asarray(self._truth, np.float64)}
+        if self.analysis is not None:
+            tree["analysis"] = np.asarray(jax.device_get(self.analysis))
+        if self._last_rebalance_loads is not None:
+            tree["last_rebalance_loads"] = np.asarray(
+                self._last_rebalance_loads)
+        for k, v in self.domain.state_dict().items():
+            tree[_DOMAIN_PREFIX + k] = np.asarray(v)
+        cursor = (self._stream.cursor
+                  if self._stream is not None else None)
+        metadata = {
+            "snapshot_version": self.SNAPSHOT_VERSION,
+            "config": dataclasses.asdict(self.cfg),
+            "domain": self.domain.describe(),
+            "rng_state": self._rng.bit_generator.state,
+            "streak": int(self._streak),
+            "journal": self.journal.to_dict(),
+            "cursor": cursor,
+            "stragglers": [s.state_dict() for s in self._stragglers],
+            "autotune": ops_mod.export_tune_caches(),
+        }
+        return tree, metadata
+
+    def save_checkpoint(self, directory: str, step: int) -> str:
+        """Atomic engine checkpoint via the hash-verified manager
+        primitives; ``step`` is the completed-cycle count.  Returns the
+        final checkpoint path."""
+        tree, metadata = self.snapshot()
+        t0 = time.perf_counter()
+        path = ckpt_mod.save_pytree(tree, directory, step, metadata)
+        m = meters_mod.get_meters()
+        m.inc("engine.snapshots")
+        m.observe("engine.snapshot_time", time.perf_counter() - t0)
+        return path
+
+    @classmethod
+    def restore(cls, checkpoint: str, *,
+                config: "EngineConfig | None" = None,
+                domain: Optional[domain_mod.Domain] = None,
+                mesh=None, mesh_axis=None,
+                forecast: Optional[Callable] = None,
+                straggler_config: Optional[StragglerConfig] = None,
+                chaos: "chaos_mod.ChaosInjector | None" = None
+                ) -> "AssimilationEngine":
+        """Rebuild an engine from a checkpoint directory (latest verified
+        step) or a specific ``step_XXXX`` path.
+
+        Same-shape resume (``config``/``domain`` omitted) restores the
+        exact saved state and is bitwise journal-continuing.  Passing a
+        ``config`` and ``domain`` overrides them for an *elastic* resume
+        under a different p — the saved domain state is then not loaded
+        (the caller, :func:`repro.runtime.elastic.remesh_assim_domain`,
+        derives the new tiling) while truth/rng/analysis/journal carry
+        over, so the stream still continues without replaying cycles.
+        """
+        flat, manifest = ckpt_mod.restore_pytree(checkpoint)
+        meta = manifest["metadata"]
+        ver = meta.get("snapshot_version")
+        if ver != cls.SNAPSHOT_VERSION:
+            raise ValueError(f"unsupported engine snapshot version {ver}")
+        cfg = config if config is not None \
+            else EngineConfig(**meta["config"])
+        eng = cls(cfg, forecast=forecast, mesh=mesh, mesh_axis=mesh_axis,
+                  domain=domain, straggler_config=straggler_config,
+                  chaos=chaos)
+        eng._load_snapshot(flat, meta, remeshed=domain is not None)
+        return eng
+
+    def _load_snapshot(self, flat: dict, meta: dict,
+                       remeshed: bool = False) -> None:
+        self._truth = np.asarray(flat["truth"], np.float64)
+        if "analysis" in flat:
+            self.analysis = jnp.asarray(flat["analysis"])
+        # Exact generator state, not a reseed: the resumed run draws the
+        # same truth steps and data noise the uninterrupted run would.
+        self._rng.bit_generator.state = meta["rng_state"]
+        journal = Journal.from_dict(meta["journal"])
+        resume_log = list(journal.meta.get("resume", []))
+        resume_log.append({"at_cycle": len(journal.records),
+                           "p": int(self.p), "remeshed": bool(remeshed)})
+        if remeshed:
+            # New tiling: domain state stays as the caller derived it,
+            # trigger/straggler state is stale for the new p — start
+            # those fresh.  The journal meta switches to the new
+            # descriptor so downstream load_table reshapes correctly.
+            journal.meta = self.domain.describe()
+        else:
+            self.domain.load_state(
+                {k.split(_DOMAIN_PREFIX, 1)[1]: v
+                 for k, v in flat.items()
+                 if k.startswith(_DOMAIN_PREFIX)})
+            self._streak = int(meta.get("streak", 0))
+            if "last_rebalance_loads" in flat:
+                self._last_rebalance_loads = np.asarray(
+                    flat["last_rebalance_loads"])
+            for mon, st in zip(self._stragglers,
+                               meta.get("stragglers", [])):
+                mon.load_state(st)
+        journal.meta["resume"] = resume_log
+        self.journal = journal
+        self._dec_cache = None
+        self._restored_cursor = meta.get("cursor")
+        ops_mod.import_tune_caches(meta.get("autotune"))
+
+    def resume_stream(self) -> "streams_mod.ResumableStream | None":
+        """The stream continuation from the restored cursor (None when
+        the snapshot was taken without a cursor-bearing stream)."""
+        cursor = self._restored_cursor
+        if cursor is None:
+            return None
+        return streams_mod.ResumableStream.from_cursor(cursor)

@@ -225,6 +225,32 @@ class Journal:
                             for r in d.get("records", [])],
                    meta=dict(d.get("meta", {})))
 
+    # Wall-clock-derived record fields: identical inputs produce
+    # different values across runs, so the resume/chaos bitwise
+    # comparisons strip them (everything else in a record is a pure
+    # function of stream + seed + config).
+    NONDETERMINISTIC_FIELDS = ("pack_time", "solve_time", "cycle_time",
+                               "phases", "device_solve_times",
+                               "straggler_flags")
+
+    def deterministic_dict(self) -> dict:
+        """``to_dict`` minus wall-clock fields and resume bookkeeping —
+        the view under which an interrupted-and-resumed run must be
+        *bitwise identical* to an uninterrupted one.  Straggler flags are
+        timing-derived too (an injected straggle changes them by design),
+        so they are part of the chaos evidence, not this view."""
+        records = []
+        for r in self.records:
+            d = r.to_dict()
+            for k in self.NONDETERMINISTIC_FIELDS:
+                d.pop(k, None)
+            records.append(d)
+        meta = {k: v for k, v in self.meta.items() if k != "resume"}
+        return {"meta": meta, "records": records}
+
+    def deterministic_json(self) -> str:
+        return json.dumps(self.deterministic_dict(), sort_keys=True)
+
     def to_json(self, **kw) -> str:
         return json.dumps(self.to_dict(), **kw)
 

@@ -46,6 +46,7 @@ from repro.assim.engine import AssimilationEngine, EngineConfig
 from repro.assim.metrics import Journal
 from repro.obs import meters as meters_mod
 from repro.obs import trace as trace_mod
+from repro.runtime import chaos as chaos_mod
 from repro.runtime.scheduler import SlotScheduler
 
 
@@ -53,14 +54,26 @@ class _StreamState:
     """One tenant: an engine, its observation iterator, and the in-flight
     ``prepare`` future (at most one per engine, ever)."""
 
-    def __init__(self, sid, engine: AssimilationEngine, stream: Iterable):
+    def __init__(self, sid, engine: AssimilationEngine, stream: Iterable,
+                 checkpoint_dir: Optional[str] = None,
+                 snapshot_every: int = 0):
         self.sid = sid
         self.engine = engine
         self.it = iter(stream)
         self.slot: Optional[int] = None
         self.fut = None               # in-flight prepare future
+        self.pending = None           # (cycle, obs) of the in-flight
+                                      # prepare — what a transient-fault
+                                      # retry resubmits verbatim
         self.exhausted = False        # iterator has run dry
         self.cycles = 0
+        self.checkpoint_dir = checkpoint_dir
+        self.snapshot_every = int(snapshot_every)
+
+    def snap_due(self, cycle: int) -> bool:
+        return (self.checkpoint_dir is not None
+                and self.snapshot_every > 0
+                and (cycle + 1) % self.snapshot_every == 0)
 
 
 class FleetServer:
@@ -84,7 +97,9 @@ class FleetServer:
 
     def __init__(self, mesh=None, mesh_axis: str = "fleet",
                  max_active: Optional[int] = None, pack_workers: int = 4,
-                 gather_window: float = 0.02, solver=None):
+                 gather_window: float = 0.02, solver=None,
+                 chaos: "chaos_mod.ChaosInjector | None" = None,
+                 max_retries: int = 2, retry_backoff: float = 0.05):
         if pack_workers < 1:
             raise ValueError(f"pack_workers must be >= 1 "
                              f"(got {pack_workers})")
@@ -92,6 +107,14 @@ class FleetServer:
             raise ValueError(f"gather_window must be >= 0 "
                              f"(got {gather_window})")
         self.gather_window = gather_window
+        # Server-level fault handling: `chaos` injects transient faults
+        # at cohort-solve dispatch (site "solve", keyed by round);
+        # TransientFaults from any stream's prepare or any cohort solve
+        # are retried up to max_retries with exponential backoff before
+        # the affected stream(s) are retired as failed.
+        self.chaos = chaos
+        self.max_retries = int(max_retries)
+        self.retry_backoff = float(retry_backoff)
         self.scheduler = SlotScheduler(capacity=max_active,
                                        meters_prefix="fleet.")
         # An explicit solver carries its pinned cohort capacities (and
@@ -111,10 +134,25 @@ class FleetServer:
     def add_stream(self, sid, config: EngineConfig,
                    stream: Iterable, *,
                    forecast: Optional[Callable] = None,
-                   domain=None) -> None:
+                   domain=None, engine: Optional[AssimilationEngine]
+                   = None, checkpoint_dir: Optional[str] = None,
+                   snapshot_every: int = 0,
+                   chaos: "chaos_mod.ChaosInjector | None" = None
+                   ) -> None:
         """Queue one assimilation stream (engine built here, started at
         admission).  ``sid`` keys the returned journal and must be
-        unique."""
+        unique.
+
+        ``checkpoint_dir``/``snapshot_every`` enable per-stream periodic
+        engine snapshots (taken at cycle boundaries — the stream's next
+        prepare is deferred around the save, like the single-engine
+        run loop).  ``chaos`` attaches a per-stream fault injector to
+        the engine (pack faults surface at claim time and are retried).
+        Pass a restored ``engine`` (from
+        :func:`repro.runtime.elastic.resume_assim_engine`) to continue
+        an interrupted stream mid-fleet — cycle numbering picks up from
+        its journal.
+        """
         if sid in self._sids:
             raise ValueError(f"duplicate stream id {sid!r}")
         if config.solver != "vmapped":
@@ -124,17 +162,24 @@ class FleetServer:
                 f"solver dedicates one device per subdomain and cannot "
                 f"be batched on a problem axis")
         self._sids.add(sid)
-        engine = AssimilationEngine(config, forecast=forecast,
-                                    domain=domain)
+        if engine is None:
+            engine = AssimilationEngine(config, forecast=forecast,
+                                        domain=domain, chaos=chaos)
+        elif chaos is not None:
+            engine._chaos = chaos
+        engine._stream = stream if hasattr(stream, "cursor") else None
         self.engines[sid] = engine
-        self.scheduler.submit(_StreamState(sid, engine, stream))
+        self.scheduler.submit(_StreamState(
+            sid, engine, stream, checkpoint_dir=checkpoint_dir,
+            snapshot_every=snapshot_every))
 
     # -- serving loop ------------------------------------------------------
 
     def _admit(self, pool: ThreadPoolExecutor) -> None:
         """Fill free slots from the queue; kick off each newcomer's first
         ``prepare``.  Empty streams retire immediately (their journal is
-        the empty journal)."""
+        the empty journal).  Cycle numbering starts at the engine's
+        journal length, so a restored engine continues its count."""
         for slot, st in self.scheduler.admit():
             st.slot = slot
             st.engine.reset_clock()
@@ -144,7 +189,65 @@ class FleetServer:
                 self.journals[st.sid] = st.engine.journal
                 self.scheduler.retire(slot)
                 continue
-            st.fut = pool.submit(st.engine.prepare, 0, first)
+            base = len(st.engine.journal.records)
+            st.pending = (base, first)
+            st.fut = pool.submit(st.engine.prepare, base, first)
+
+    def _submit_next(self, st: _StreamState,
+                     pool: ThreadPoolExecutor, cycle: int) -> None:
+        """Draw the stream's next observation and pipeline its prepare;
+        marks the stream exhausted when the iterator runs dry."""
+        nxt = next(st.it, None)
+        if nxt is None:
+            st.exhausted = True
+            return
+        st.pending = (cycle, nxt)
+        st.fut = pool.submit(st.engine.prepare, cycle, nxt)
+
+    def _fail_stream(self, st: _StreamState, exc: BaseException) -> None:
+        """Retire a crashed stream: journal what it completed, reclaim
+        its slot (the scheduler re-admits from the queue on the next
+        round), and journal the failure as an obs event.  Every stream
+        failure path funnels through here — a prepare that raises on the
+        pool can no longer leak its slot."""
+        m = meters_mod.get_meters()
+        m.event("fleet.stream_failed", sid=st.sid,
+                cycles_completed=int(st.cycles),
+                error=f"{type(exc).__name__}: {exc}")
+        m.inc("fleet.streams_failed")
+        st.exhausted = True
+        st.fut = None
+        self.journals[st.sid] = st.engine.journal
+        if st.slot is not None:
+            self.scheduler.retire(st.slot)
+            st.slot = None
+
+    def _claim(self, st: _StreamState, pool: ThreadPoolExecutor):
+        """Claim a finished prepare, retrying TransientFaults by
+        resubmitting the same (cycle, obs) with exponential backoff —
+        injected pack faults fire before any engine state mutation, so
+        the retry is bitwise-equivalent.  Non-transient exceptions and
+        an exhausted retry budget propagate to the failure path."""
+        m = meters_mod.get_meters()
+        fut = st.fut
+        for attempt in range(self.max_retries + 1):
+            try:
+                return fut.result()
+            except chaos_mod.TransientFault:
+                if attempt >= self.max_retries:
+                    raise
+                cycle, obs = st.pending
+                m.event("chaos.retry", site="pack", sid=st.sid,
+                        cycle=int(cycle), attempt=attempt + 1)
+                m.inc("chaos.retries")
+                time.sleep(self.retry_backoff * (2.0 ** attempt))
+                fut = pool.submit(st.engine.prepare, cycle, obs)
+
+    def _cohort_solve(self, key, packs, round_no: int):
+        """One cohort dispatch behind the server-level fault injector."""
+        if self.chaos is not None:
+            self.chaos.check("solve", round_no)
+        return self.solver.solve(key, packs)
 
     def serve(self) -> Dict[object, Journal]:
         """Run every queued stream to exhaustion; returns the per-stream
@@ -178,17 +281,24 @@ class FleetServer:
                 # Claim finished preps; pipeline each stream's next
                 # prepare onto the pool *before* this round's solve so
                 # host packing overlaps device work (the engine's
-                # double-buffering, fleet-wide).
+                # double-buffering, fleet-wide).  On a snapshot-due
+                # cycle the next prepare is deferred until after the
+                # save (it would mutate the engine state mid-snapshot);
+                # a stream whose prepare ultimately failed is retired
+                # with its slot reclaimed.
                 items = []
+                deferred = []
                 for st in ready:
-                    prep = st.fut.result()
+                    try:
+                        prep = self._claim(st, pool)
+                    except Exception as e:
+                        self._fail_stream(st, e)
+                        continue
                     st.fut = None
-                    nxt = next(st.it, None)
-                    if nxt is not None:
-                        st.fut = pool.submit(st.engine.prepare,
-                                             prep.cycle + 1, nxt)
+                    if st.snap_due(prep.cycle):
+                        deferred.append((st, prep))
                     else:
-                        st.exhausted = True
+                        self._submit_next(st, pool, prep.cycle + 1)
                     if prep.repartitioned:
                         # DyDD isolation: note the repack; the stream's
                         # new shape re-buckets it below without touching
@@ -206,21 +316,52 @@ class FleetServer:
                                     streams=len(items)):
                     for key, members in fleet_mod.group_cohorts(
                             items).items():
-                        res = self.solver.solve(
-                            key, [pk for (_, _, pk, _) in members])
+                        try:
+                            res = chaos_mod.retry_transient(
+                                lambda: self._cohort_solve(
+                                    key, [pk for (_, _, pk, _)
+                                          in members], rounds),
+                                retries=self.max_retries,
+                                backoff=self.retry_backoff,
+                                site="solve", cycle=rounds)
+                        except Exception as e:
+                            # Cohort lost: retire its members; other
+                            # cohorts (and their streams) are untouched.
+                            for (st, _, _, _) in members:
+                                self._fail_stream(st, e)
+                            continue
                         for (st, prep, _, background), x, hist in zip(
                                 members, res.xs, res.hists):
                             st.engine.complete_cycle(
                                 prep, x, background,
                                 solve_time=res.solve_time, hist=hist)
                             st.cycles += 1
+                            if (st.engine._chaos is not None
+                                    and not st.snap_due(prep.cycle)):
+                                st.engine._chaos.maybe_kill(
+                                    "cycle_end", prep.cycle)
                 rounds += 1
                 m.inc("fleet.rounds")
 
+                # Deferred tail of snapshot cycles: the engine is at a
+                # clean cycle boundary (solve completed, next prepare
+                # not yet submitted) — save, then resume pipelining.
+                for st, prep in deferred:
+                    if st.exhausted and st.slot is None:
+                        continue   # failed during its cohort solve
+                    st.engine.save_checkpoint(st.checkpoint_dir,
+                                              step=prep.cycle + 1)
+                    if st.engine._chaos is not None:
+                        st.engine._chaos.maybe_kill("cycle_end",
+                                                    prep.cycle)
+                    self._submit_next(st, pool, prep.cycle + 1)
+
                 for st in ready:
-                    if st.exhausted and st.fut is None:
+                    if st.exhausted and st.fut is None \
+                            and st.slot is not None:
                         self.journals[st.sid] = st.engine.journal
                         self.scheduler.retire(st.slot)
+                        st.slot = None
                 self._admit(pool)
 
         wall = time.perf_counter() - t_start

@@ -95,6 +95,53 @@ def make_stream(name: str, m: int, cycles: int, seed: int = 0,
     return checked()
 
 
+class ResumableStream:
+    """A stream with a serializable cursor, for checkpoint/resume.
+
+    Wraps the checked scenario iterator and counts cycles consumed.
+    ``cursor`` is a JSON-ready dict (scenario name, m, cycles, seed,
+    extra kwargs, and the position); :meth:`from_cursor` rebuilds the
+    stream and *fast-forwards* it — scenarios are seeded and
+    deterministic, so re-drawing and discarding the first ``pos``
+    arrays reproduces the generator's internal state exactly without
+    replaying any solves.  This is what lets engine resume continue a
+    stream bitwise from the cycle after the snapshot.
+    """
+
+    def __init__(self, name: str, m: int, cycles: int, seed: int = 0,
+                 **kw):
+        self.name, self.m, self.cycles, self.seed = name, m, cycles, seed
+        self.kw = dict(kw)
+        self.pos = 0
+        self._it = make_stream(name, m, cycles, seed, **kw)
+
+    def __iter__(self):
+        return self
+
+    def __next__(self) -> np.ndarray:
+        obs = next(self._it)
+        self.pos += 1
+        return obs
+
+    @property
+    def cursor(self) -> dict:
+        return {"name": self.name, "m": int(self.m),
+                "cycles": int(self.cycles), "seed": int(self.seed),
+                "pos": int(self.pos), "kw": dict(self.kw)}
+
+    @classmethod
+    def from_cursor(cls, cursor: dict) -> "ResumableStream":
+        s = cls(cursor["name"], int(cursor["m"]), int(cursor["cycles"]),
+                int(cursor["seed"]), **cursor.get("kw", {}))
+        for _ in range(int(cursor["pos"])):   # fast-forward, no solves
+            next(s._it)
+            s.pos += 1
+        return s
+
+    def remaining(self) -> int:
+        return self.cycles - self.pos
+
+
 def _finalize(obs: np.ndarray) -> np.ndarray:
     return np.sort(np.clip(obs, 0.0, np.nextafter(1.0, 0.0)))
 

@@ -29,8 +29,51 @@ from typing import Any
 import numpy as np
 import jax
 
+from repro.obs import meters as meters_mod
+
 
 _SEP = "/"
+
+
+def _fsync_dir(path: str) -> None:
+    """fsync a directory so the rename that just landed in it is durable
+    (POSIX: os.replace orders the entry but does not persist it until
+    the directory inode is synced).  Best-effort — some filesystems
+    refuse O_RDONLY dir fds."""
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:
+        return
+    try:
+        os.fsync(fd)
+    except OSError:
+        pass
+    finally:
+        os.close(fd)
+
+
+def _pid_alive(pid: int) -> bool:
+    try:
+        os.kill(pid, 0)
+    except ProcessLookupError:
+        return False
+    except (PermissionError, OSError):
+        # exists but owned by someone else / unknown — assume live
+        return True
+    return True
+
+
+def _tmp_writer_pid(name: str) -> int | None:
+    """Parse the writer pid out of a ``step_X.{pid}-{tid}.tmp`` staging
+    dir name; None if the name doesn't match that convention."""
+    if not name.endswith(".tmp"):
+        return None
+    stem = name[:-len(".tmp")]
+    tag = stem.rsplit(".", 1)
+    if len(tag) != 2 or "-" not in tag[1]:
+        return None
+    pid_s = tag[1].split("-", 1)[0]
+    return int(pid_s) if pid_s.isdigit() else None
 
 
 def _flatten(tree):
@@ -75,6 +118,10 @@ def save_pytree(tree, directory: str, step: int, metadata: dict | None
     if os.path.exists(final):
         shutil.rmtree(final)
     os.replace(tmp, final)
+    # The rename is only crash-durable once the parent directory's inode
+    # is on disk; without this a power cut can resurrect the pre-rename
+    # state even though save() returned.
+    _fsync_dir(directory)
     return final
 
 
@@ -156,6 +203,11 @@ def latest_checkpoint(directory: str) -> str | None:
         path = os.path.join(directory, d)
         if verify(path):
             return path
+        # Torn/corrupt candidate skipped — the event is the operator's
+        # only signal that a checkpoint was silently lost to a crash.
+        meters_mod.get_meters().event("checkpoint.corrupt_skipped",
+                                      path=path)
+        meters_mod.get_meters().inc("checkpoint.corrupt_skipped")
     return None
 
 
@@ -179,17 +231,35 @@ class CheckpointManager:
             try:
                 save_pytree(tree, self.directory, step, metadata)
                 self._gc()
-            except Exception as e:   # pragma: no cover - surfaced on wait
+            except Exception as e:
+                # Surface at failure time, not just on wait(): an async
+                # save that dies silently means the next crash loses far
+                # more progress than the operator believes.
                 self._errors.append(e)
+                meters_mod.get_meters().event(
+                    "checkpoint.save_failed", step=int(step),
+                    error=f"{type(e).__name__}: {e}")
+                meters_mod.get_meters().inc("checkpoint.save_failed")
             finally:
                 self._queue.task_done()
 
     def _gc(self):
-        cands = sorted(d for d in os.listdir(self.directory)
+        entries = os.listdir(self.directory)
+        cands = sorted(d for d in entries
                        if d.startswith("step_") and not d.endswith(".tmp"))
         for d in cands[:-self.keep]:
             shutil.rmtree(os.path.join(self.directory, d),
                           ignore_errors=True)
+        # Stale staging dirs from crashed writers accumulate forever
+        # otherwise; skip dirs whose writer pid is still alive (another
+        # process mid-save) and our own (this thread pool mid-save).
+        for d in entries:
+            pid = _tmp_writer_pid(d)
+            if pid is None or pid == os.getpid() or _pid_alive(pid):
+                continue
+            shutil.rmtree(os.path.join(self.directory, d),
+                          ignore_errors=True)
+            meters_mod.get_meters().inc("checkpoint.stale_tmp_removed")
 
     def save(self, tree, step: int, metadata: dict | None = None,
              blocking: bool = True):

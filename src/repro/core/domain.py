@@ -207,6 +207,19 @@ class Interval1D:
         return {"ndim": 1, "kind": "interval1d", "n": self._n,
                 "p": self._p}
 
+    def state_dict(self) -> dict:
+        """The mutable boundary state, as arrays (checkpoint leaves)."""
+        return {"boundaries": self.boundaries.copy(),
+                "tie_ranks": self.tie_ranks.copy()}
+
+    def load_state(self, state: dict) -> None:
+        b = np.asarray(state["boundaries"], np.float64)
+        t = np.asarray(state["tie_ranks"], np.int64)
+        assert b.shape == (self._p + 1,)
+        assert t.shape == (max(self._p - 1, 0),)
+        self.boundaries = b.copy()
+        self.tie_ranks = t.copy()
+
 
 # ---------------------------------------------------------------------------
 # 2D shelf tiling (the paper's Ω ⊂ R²).
@@ -318,6 +331,27 @@ class ShelfTiling2D:
         return {"ndim": 2, "kind": "shelf2d", "n": self.n,
                 "p": self.p, "nx": self.nx, "ny": self.ny,
                 "pr": self.pr, "pc": self.pc}
+
+    def state_dict(self) -> dict:
+        """The mutable shelf state, as arrays (checkpoint leaves)."""
+        return {"y_edges": self.y_edges.copy(),
+                "x_edges": self.x_edges.copy(),
+                "y_tie_ranks": self.y_tie_ranks.copy(),
+                "x_tie_ranks": self.x_tie_ranks.copy()}
+
+    def load_state(self, state: dict) -> None:
+        ye = np.asarray(state["y_edges"], np.float64)
+        xe = np.asarray(state["x_edges"], np.float64)
+        yt = np.asarray(state["y_tie_ranks"], np.int64)
+        xt = np.asarray(state["x_tie_ranks"], np.int64)
+        assert ye.shape == (self.pr + 1,)
+        assert xe.shape == (self.pr, self.pc + 1)
+        assert yt.shape == (max(self.pr - 1, 0),)
+        assert xt.shape == (self.pr, max(self.pc - 1, 0))
+        self.y_edges = ye.copy()
+        self.x_edges = xe.copy()
+        self.y_tie_ranks = yt.copy()
+        self.x_tie_ranks = xt.copy()
 
 
 def factor_mesh(n: int) -> tuple:

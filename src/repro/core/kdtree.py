@@ -326,3 +326,12 @@ class KDTreeDomain:
     def describe(self) -> dict:
         return {"ndim": 2, "kind": "kdtree", "n": self.n, "p": self._p,
                 "nx": self.nx, "ny": self.ny, "depth": self._depth}
+
+    def state_dict(self) -> dict:
+        """The mutable cut state, as arrays (checkpoint leaves)."""
+        return {"rects": self.rects.copy()}
+
+    def load_state(self, state: dict) -> None:
+        r = np.asarray(state["rects"], np.float64)
+        assert r.shape == (self._p, 4)
+        self.rects = r.copy()

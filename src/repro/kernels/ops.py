@@ -260,6 +260,42 @@ def schwarz_tuning_report() -> dict:
     }
 
 
+def export_tune_caches() -> dict:
+    """Both autotune caches as one JSON-ready dict (checkpoint payload):
+    a resumed engine re-imports them so the first post-restore solve
+    doesn't re-run the candidate sweeps."""
+    def dump(cache):
+        return [{"key": list(k),
+                 "block_m": int(v["block_m"]),
+                 "time_s": float(v["time_s"]),
+                 "sweep_s": {str(bm): float(t)
+                             for bm, t in v["sweep_s"].items()},
+                 "rejected_vmem": dict(v["rejected_vmem"])}
+                for k, v in cache.items()]
+    return {"gram": dump(_GRAM_TUNE_CACHE),
+            "schwarz": dump(_SCHWARZ_TUNE_CACHE)}
+
+
+def import_tune_caches(payload: dict) -> int:
+    """Merge a previously exported cache payload in (existing entries
+    win — they were timed on *this* host).  Returns entries added."""
+    added = 0
+    for name, cache in (("gram", _GRAM_TUNE_CACHE),
+                        ("schwarz", _SCHWARZ_TUNE_CACHE)):
+        for row in (payload or {}).get(name, []):
+            p, m, w, dt, it = row["key"]
+            key = (int(p), int(m), int(w), str(dt), bool(it))
+            if key in cache:
+                continue
+            cache[key] = {"block_m": int(row["block_m"]),
+                          "time_s": float(row["time_s"]),
+                          "sweep_s": {int(bm): float(t) for bm, t
+                                      in row["sweep_s"].items()},
+                          "rejected_vmem": dict(row["rejected_vmem"])}
+            added += 1
+    return added
+
+
 def schwarz_fwd(A, x, wdiv, *, mode: str = "auto",
                 block_m: int | None = None):
     """Fused forward Schwarz half: (y, u) = (A @ (x * wdiv), A @ x) in

@@ -62,6 +62,18 @@ class StragglerMonitor:
             self.ewma = (1 - a) * self.ewma + a * seconds
         return flagged
 
+    def state_dict(self) -> dict:
+        """JSON-ready EWMA/streak state (``events`` stays host-local —
+        it's an operator log, not detector state)."""
+        return {"ewma": self.ewma, "step": int(self.step),
+                "slow_streak": int(self._slow_streak)}
+
+    def load_state(self, state: dict) -> None:
+        self.ewma = (None if state.get("ewma") is None
+                     else float(state["ewma"]))
+        self.step = int(state.get("step", 0))
+        self._slow_streak = int(state.get("slow_streak", 0))
+
     def timed(self, fn, *args, **kwargs):
         t0 = time.perf_counter()
         out = fn(*args, **kwargs)

@@ -100,6 +100,89 @@ def test_roundtrip_random_trees(tmp_path_factory, seed):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
+@pytest.fixture()
+def fresh_meters():
+    from repro.obs import meters as obs_meters
+    prev = obs_meters.get_meters()
+    m = obs_meters.Meters()
+    obs_meters.set_meters(m)
+    yield m
+    obs_meters.set_meters(prev)
+
+
+def test_latest_falls_back_on_truncated_leaf(tmp_path, fresh_meters):
+    """A leaf .npy truncated mid-bytes (torn write surviving the rename)
+    fails hash verification; latest_checkpoint falls back to the
+    previous verified step and journals the skip."""
+    from repro.runtime import chaos as chaos_mod
+    tree = _tree()
+    p1 = ckpt.save_pytree(tree, str(tmp_path), step=1)
+    p2 = ckpt.save_pytree(tree, str(tmp_path), step=2)
+    chaos_mod.tear_checkpoint(p2, seed=3)
+    assert not ckpt.verify(p2)
+    assert ckpt.latest_checkpoint(str(tmp_path)) == p1
+    snap = fresh_meters.snapshot()
+    assert snap["counters"]["checkpoint.corrupt_skipped"] == 1
+    assert any(e["name"] == "checkpoint.corrupt_skipped"
+               and e["path"] == p2 for e in snap["events"])
+
+
+def test_latest_falls_back_on_corrupt_manifest(tmp_path):
+    tree = _tree()
+    p1 = ckpt.save_pytree(tree, str(tmp_path), step=1)
+    p2 = ckpt.save_pytree(tree, str(tmp_path), step=2)
+    from repro.runtime import chaos as chaos_mod
+    chaos_mod.corrupt_manifest(p2, seed=7)
+    assert ckpt.latest_checkpoint(str(tmp_path)) == p1
+
+
+def test_gc_removes_stale_tmp_keeps_live(tmp_path, fresh_meters):
+    """_gc sweeps staging dirs whose writer pid is dead, and leaves
+    another live writer's staging dir alone."""
+    import subprocess
+    mgr = ckpt.CheckpointManager(str(tmp_path), keep=2)
+    tree = _tree()
+    # A certainly-dead writer pid: spawn-and-reap a child.
+    child = subprocess.Popen(["true"])
+    child.wait()
+    dead = os.path.join(str(tmp_path),
+                        f"step_00000005.{child.pid}-1.tmp")
+    live = os.path.join(str(tmp_path),
+                        f"step_00000006.{os.getpid()}-123.tmp")
+    other = os.path.join(str(tmp_path), "step_00000007.tmp")  # no pid tag
+    for d in (dead, live, other):
+        os.makedirs(d)
+    for s in range(3):
+        mgr.save(tree, step=s, blocking=False)
+    mgr.wait()
+    assert not os.path.exists(dead)
+    assert os.path.exists(live)
+    assert os.path.exists(other)   # unparseable: never touched
+    snap = fresh_meters.snapshot()
+    assert snap["counters"]["checkpoint.stale_tmp_removed"] >= 1
+    mgr.close()
+
+
+def test_async_save_failure_emits_event(tmp_path, fresh_meters):
+    """An async save that dies surfaces as an obs event/counter at
+    failure time, and still raises on wait()."""
+    mgr = ckpt.CheckpointManager(str(tmp_path), keep=2)
+    # Squat a regular file on the checkpoint directory path so the
+    # worker's makedirs fails — a realistic misconfigured-path failure.
+    shutil.rmtree(str(tmp_path))
+    with open(str(tmp_path), "w") as f:
+        f.write("not a directory")
+    mgr.save(_tree(), step=1, blocking=False)
+    with pytest.raises(Exception):
+        mgr.wait()
+    snap = fresh_meters.snapshot()
+    assert snap["counters"]["checkpoint.save_failed"] == 1
+    assert any(e["name"] == "checkpoint.save_failed" and e["step"] == 1
+               for e in snap["events"])
+    mgr.close()
+    os.remove(str(tmp_path))
+
+
 @pytest.mark.slow
 def test_elastic_remesh_subprocess(tmp_path):
     """Save under a (2,2) mesh, restore under (4,1) and (1,2) — the

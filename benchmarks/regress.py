@@ -154,6 +154,23 @@ def extract_metrics(bench: dict) -> dict:
         add(f"chaos.snapshot_overhead.{cad}.snapshot_over_cycle_ratio",
             row["snapshot_over_cycle_ratio"], tolerance=1.0,
             direction="max")
+    pint = bench.get("pint")
+    if pint:
+        # Parallel-in-time arm (streaming_bench --time-windows): the
+        # window engine's whole reason to exist is wall-clock over the
+        # sequential cycle loop — gated as a ratio (machine speed
+        # cancels) with the serving-grade tolerance, since both arms'
+        # thread/device scheduling is runner-noisy.
+        add("pint.pint_over_sequential_cycles_per_sec",
+            pint["pint_over_sequential_cycles_per_sec"],
+            tolerance=SERVING_RATIO_TOLERANCE, direction="min")
+        # Deterministic given (stream, seed, config): the Parareal
+        # iteration count must not creep up (more fine sweeps = the
+        # speedup quietly eroding), and convergence is 1.0-or-broken.
+        add("pint.pint_iters", pint["pint_iters"], tolerance=0.5,
+            direction="max")
+        add("pint.converged", 1.0 if pint["converged"] else 0.0,
+            tolerance=0.0, direction="min")
     for count, row in bench.get("fleet_counts", {}).items():
         # serving_bench reports: the fleet's whole reason to exist is
         # throughput over the sequential per-engine loop.  Gated as a

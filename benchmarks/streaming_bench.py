@@ -37,6 +37,7 @@ import argparse
 import contextlib
 import json
 import sys
+import time
 
 import jax
 
@@ -194,6 +195,81 @@ def comm_sweep(args) -> dict:
     return out
 
 
+def pint_section(args) -> dict:
+    """Parallel-in-time arm: one long 1D stream run sequentially and
+    under the Parareal window engine (``repro.assim.timepar``), with the
+    wall-clock cycles/sec ratio, the Parareal iteration evidence and the
+    analysis-chain parity recorded side by side.
+
+    Both arms are warmed up on the *same full stream* first so jit
+    compilation does not land in either measurement: the window-stacked
+    program (and the padded solver programs) are specific to the
+    stream-wide max block width, which a short prefix would not
+    reproduce — DyDD drifts the widths over the stream.
+    """
+    from repro.assim.timepar import TimeParEngine
+
+    name, cycles = "drifting_swarm", args.pint_cycles
+    cfg_kw = dict(n=args.n, p=args.p, iters=args.iters,
+                  record_residuals=False)
+    pint_cfg = EngineConfig(time_windows=args.time_windows,
+                            pint_tol=args.pint_tol,
+                            pint_fine_iters=args.pint_fine_iters,
+                            pint_coarse_iters=args.pint_coarse_iters,
+                            **cfg_kw)
+
+    print(f"[streaming_bench] pint warmup ({cycles} cycles, both arms)"
+          f" ...", file=sys.stderr)
+    AssimilationEngine(EngineConfig(**cfg_kw)).run(
+        streams.make_stream(name, args.m, cycles, seed=args.seed))
+    TimeParEngine(pint_cfg).run(
+        streams.make_stream(name, args.m, cycles, seed=args.seed))
+
+    print(f"[streaming_bench] pint sequential arm ({cycles} cycles) ...",
+          file=sys.stderr)
+    seq = AssimilationEngine(EngineConfig(**cfg_kw))
+    chain: list = []
+    seq.on_analysis = lambda c, x: chain.append(np.asarray(x))
+    t0 = time.perf_counter()
+    seq.run(streams.make_stream(name, args.m, cycles, seed=args.seed))
+    seq_wall = time.perf_counter() - t0
+
+    print(f"[streaming_bench] pint windowed arm (W={args.time_windows})"
+          f" ...", file=sys.stderr)
+    tp = TimeParEngine(pint_cfg)
+    t0 = time.perf_counter()
+    journal = tp.run(streams.make_stream(name, args.m, cycles,
+                                         seed=args.seed))
+    pint_wall = time.perf_counter() - t0
+
+    meta = journal.meta["pint"]
+    diff = max(float(np.max(np.abs(a - b)))
+               for a, b in zip(tp.analyses, chain))
+    return {
+        "scenario": name,
+        "cycles": cycles,
+        "time_windows": meta["time_windows"],
+        "window_sizes": meta["window_sizes"],
+        "mesh": meta["mesh"],
+        "coarse_iters": meta["coarse_iters"],
+        "fine_iters": meta["fine_iters"],
+        "warm_start": meta["warm_start"],
+        "pint_iters": meta["iters"],
+        "converged": bool(meta["converged"]),
+        "correction_norms": meta["correction_norms"],
+        "tol": meta["tol"],
+        "sequential_wall_s": seq_wall,
+        "pint_wall_s": pint_wall,
+        "sequential_cycles_per_sec": cycles / max(seq_wall, 1e-12),
+        "pint_cycles_per_sec": cycles / max(pint_wall, 1e-12),
+        # The headline: windowed throughput over sequential on the same
+        # stream (> 1 means the time axis bought real wall-clock).
+        "pint_over_sequential_cycles_per_sec":
+            seq_wall / max(pint_wall, 1e-12),
+        "analysis_chain_max_abs_diff": diff,
+    }
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--n", type=int, default=256, help="1D state dimension")
@@ -245,6 +321,27 @@ def main() -> None:
                     "fused Schwarz-step kernel and record wall-clock + "
                     "solve phase ratio side by side (the fused kernel "
                     "resolves to its interpret/reference path off-TPU)")
+    ap.add_argument("--time-windows", type=int, default=0,
+                    help="run the parallel-in-time section: a long "
+                    "drifting_swarm stream sequentially and under the "
+                    "Parareal window engine with this many windows "
+                    "(sharded over a ('time','sub') mesh when the "
+                    "device count factors); 0 = off")
+    ap.add_argument("--pint-cycles", type=int, default=32,
+                    help="stream length of the parallel-in-time section")
+    ap.add_argument("--pint-tol", type=float, default=1e-8,
+                    help="Parareal correction-norm stopping tolerance")
+    ap.add_argument("--pint-coarse-iters", type=int, default=0,
+                    help="Schwarz iterations of the coarse propagator "
+                    "(0 = --iters // 10)")
+    ap.add_argument("--pint-fine-iters", type=int, default=0,
+                    help="Schwarz iterations of the warm-started fine "
+                    "sweeps (0 = cold full --iters solves); the "
+                    "work-optimal Parareal setting — coarse + fine "
+                    "iterations together buy the accuracy, so the "
+                    "windowed arm spends fewer total iterations per "
+                    "cycle than the sequential arm at the same "
+                    "analysis-chain tolerance")
     ap.add_argument("--scenarios", nargs="*", default=None,
                     choices=streams.available(),
                     help="subset of the registered scenarios "
@@ -280,7 +377,10 @@ def main() -> None:
                    "solver": args.solver, "overlap": args.overlap,
                    "comm": args.comm, "halo_weight": args.halo_weight,
                    "domain": args.domain,
-                   "solver_kernel": args.solver_kernel},
+                   "solver_kernel": args.solver_kernel,
+                   "time_windows": args.time_windows,
+                   "pint_cycles": args.pint_cycles,
+                   "pint_fine_iters": args.pint_fine_iters},
         "scenarios": {},
         # Modelled bytes vs overlap width for both comm paths (no runs
         # needed — the model depends only on the decomposition).
@@ -402,6 +502,9 @@ def main() -> None:
             kcompare["analysis_max_abs_diff"] = float(np.max(np.abs(
                 kanalyses["jnp"] - kanalyses["fused"])))
             report["scenarios"][name]["kernel_compare"] = kcompare
+
+    if args.time_windows > 0:
+        report["pint"] = pint_section(args)
 
     # Autotuned gram reduction tiles (chosen block_m + timed sweep per
     # packed shape; empty when every pack took the jnp reference path).

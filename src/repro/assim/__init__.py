@@ -3,8 +3,10 @@
 See README.md in this directory for the engine loop, the rebalance
 trigger policy, and how to add a stream scenario.
 """
-from repro.assim.engine import AssimilationEngine, EngineConfig  # noqa: F401
+from repro.assim.engine import (  # noqa: F401
+    AssimilationEngine, CycleStep, EngineConfig)
 from repro.assim.metrics import (  # noqa: F401
     CycleMetrics, Journal, imbalance_ratio)
 from repro.assim import streams  # noqa: F401
 from repro.assim.serving import FleetServer  # noqa: F401
+from repro.assim.timepar import TimeParEngine  # noqa: F401

@@ -29,6 +29,7 @@ on the main thread via a cheap ``dataclasses.replace``.
 from __future__ import annotations
 
 import contextlib
+import copy
 import dataclasses
 import time
 from concurrent.futures import ThreadPoolExecutor
@@ -148,6 +149,26 @@ class EngineConfig:
                                       # backoff); exceeding it is fatal.
                                       # Retries are bitwise-safe: faults
                                       # fire before any state mutation
+    time_windows: int = 1             # parallel-in-time (Parareal) window
+                                      # count for repro.assim.timepar;
+                                      # 1 = the sequential cycle loop
+                                      # (bitwise-identical degeneration)
+    pint_tol: float = 1e-8            # Parareal convergence tolerance on
+                                      # the max window-boundary
+                                      # correction (max-abs norm)
+    pint_max_iters: int = 8           # Parareal iteration cap; 0 forces
+                                      # the sequential engine (bitwise
+                                      # degeneration, like time_windows=1)
+    pint_coarse_iters: int = 0        # Schwarz iterations of the coarse
+                                      # propagator; 0 = max(1, iters//10)
+    pint_fine_iters: int = 0          # Schwarz iterations of the fine
+                                      # sweeps; 0 = iters (cold-start
+                                      # equivalent).  When set, fine
+                                      # solves warm-start from the coarse
+                                      # trajectory, so the combined
+                                      # coarse+fine iteration count is
+                                      # what buys the accuracy — the
+                                      # work-optimal Parareal variant
 
 
 def _resolve_mesh_shape(cfg: EngineConfig) -> tuple:
@@ -229,6 +250,33 @@ class _Prepared:
         default_factory=dict)           # mesh-axis name -> per-cycle
                                         # m-vector all-reduce bytes (torus
                                         # pricing: outer axes full-vector)
+    window: int = -1                    # time-window id (parallel-in-time
+                                        # runs); -1 on sequential cycles
+
+
+@dataclasses.dataclass
+class CycleStep:
+    """One cycle of the engine's per-cycle state machine.
+
+    ``run`` (and external drivers: the fleet runner, the Parareal
+    window engine) advance a step through the three stages —
+    :meth:`AssimilationEngine.prepare` fills ``prep``,
+    :meth:`AssimilationEngine.solve_step` fills the solve outputs,
+    :meth:`AssimilationEngine.finish_step` journals it — making the
+    cycle lifecycle a first-class record instead of loop-local state.
+    ``window`` tags which time window the cycle belongs to (-1 =
+    sequential run) and rides through to the journal.
+    """
+
+    cycle: int
+    obs: np.ndarray
+    window: int = -1
+    prep: Optional[_Prepared] = None
+    analysis: Optional[jax.Array] = None
+    background: Optional[np.ndarray] = None
+    solve_time: float = 0.0
+    hist: object = None
+    device_times: list = dataclasses.field(default_factory=list)
 
 
 class AssimilationEngine:
@@ -281,6 +329,18 @@ class AssimilationEngine:
             raise ValueError(
                 f"imbalance_threshold is a max/mean ratio and must be "
                 f">= 1.0 (got {config.imbalance_threshold})")
+        if config.time_windows < 1:
+            raise ValueError(
+                f"time_windows must be >= 1 (got {config.time_windows})")
+        if (config.pint_max_iters < 0 or config.pint_coarse_iters < 0
+                or config.pint_fine_iters < 0):
+            raise ValueError(
+                f"pint_max_iters/pint_coarse_iters/pint_fine_iters must "
+                f"be >= 0 (got {config.pint_max_iters}/"
+                f"{config.pint_coarse_iters}/{config.pint_fine_iters})")
+        if config.pint_tol <= 0:
+            raise ValueError(
+                f"pint_tol must be > 0 (got {config.pint_tol})")
 
         self.domain = domain if domain is not None \
             else _domain_from_config(config)
@@ -309,6 +369,12 @@ class AssimilationEngine:
         # resume can fast-forward the seeded generator.
         self._stream = None
         self._restored_cursor: Optional[dict] = None
+        # Optional per-cycle analysis hook: called as
+        # ``on_analysis(cycle, x)`` from complete_cycle right after the
+        # analysis is published — how parity tests and the Parareal
+        # gate capture the sequential analysis chain without journalling
+        # (n,) vectors.
+        self.on_analysis: Optional[Callable] = None
 
     # -- mesh resolution for the sharded solver ----------------------------
 
@@ -414,14 +480,19 @@ class AssimilationEngine:
             return None
         return self.cfg.halo_weight * self._current_dec().halo_sizes
 
-    def prepare(self, cycle: int, obs: np.ndarray) -> _Prepared:
+    def prepare(self, cycle: int, obs: np.ndarray,
+                window: int = -1) -> _Prepared:
         """Host-side work for one cycle: DyDD decision, repartition,
         operator packing, observation data.  Depends only on the stream
         and boundary state — never on a solve result — so it may run on
-        a worker thread while the device solves an earlier cycle.  The
+        a worker thread while the device solves an earlier cycle (or,
+        for the parallel-in-time engine, for *every* cycle of the stream
+        up front: the mutation chain is identical to the sequential
+        sweep's, whatever backgrounds later flow into the solves).  The
         engine mutates its domain/truth/rng state here, so at most one
         ``prepare`` per engine may be in flight at a time (the serving
-        layer's packing pool enforces this per stream)."""
+        layer's packing pool enforces this per stream).  ``window`` tags
+        the resulting cycle record with a time-window id."""
         # Fault injection sits BEFORE any state mutation: a retried
         # prepare after a TransientFault starts from identical rng/
         # domain/truth state, so the retry is bitwise-equivalent to an
@@ -525,7 +596,8 @@ class AssimilationEngine:
                          phases=phases,
                          comm_edge_bytes_per_cycle=edge_bytes,
                          comm_mvec_bytes_per_cycle=float(mvec_bytes),
-                         comm_mvec_axis_bytes_per_cycle=mvec_axis_bytes)
+                         comm_mvec_axis_bytes_per_cycle=mvec_axis_bytes,
+                         window=window)
 
     # -- device-side solve (main thread) -----------------------------------
 
@@ -640,23 +712,23 @@ class AssimilationEngine:
             return (checkpoint_dir is not None and snapshot_every > 0
                     and (cycle + 1) % snapshot_every == 0)
 
-        def finish(prep: "_Prepared") -> None:
-            self._run_cycle(prep)
-            if snap_due(prep.cycle):
-                self.save_checkpoint(checkpoint_dir, step=prep.cycle + 1)
+        def finish(step: "CycleStep") -> None:
+            self.finish_step(self.solve_step(step))
+            if snap_due(step.cycle):
+                self.save_checkpoint(checkpoint_dir, step=step.cycle + 1)
             if self._chaos is not None:
                 # After the snapshot: a kill at cycle c resumes from a
                 # checkpoint no newer than c+1, never a torn mid-cycle.
-                self._chaos.maybe_kill("cycle_end", prep.cycle)
+                self._chaos.maybe_kill("cycle_end", step.cycle)
 
         if not cfg.double_buffer:
             for i, obs in enumerate(it):
-                cycle = base + i
-                prep = chaos_mod.retry_transient(
-                    lambda: self.prepare(cycle, obs),
+                step = CycleStep(cycle=base + i, obs=obs)
+                step.prep = chaos_mod.retry_transient(
+                    lambda: self.prepare(step.cycle, step.obs),
                     retries=max(cfg.solve_retries, 0),
-                    site="pack", cycle=cycle)
-                finish(prep)
+                    site="pack", cycle=step.cycle)
+                finish(step)
             return self.journal
 
         # Double-buffered: prepare cycle t+1 on the worker while the main
@@ -671,30 +743,33 @@ class AssimilationEngine:
                 first = next(it)
             except StopIteration:
                 return self.journal
-            fut = pool.submit(self.prepare, base, first)
-            pending = (base, first)
+            step = CycleStep(cycle=base, obs=first)
+            fut = pool.submit(self.prepare, step.cycle, step.obs)
             cycle = base
             while fut is not None:
-                prep = self._claim_prepare(fut, pool, *pending)
+                step.prep = self._claim_prepare(fut, pool, step.cycle,
+                                                step.obs)
+                cur = step
                 cycle += 1
                 fut = None
 
                 def submit_next():
-                    nonlocal fut, pending
+                    nonlocal fut, step
                     nxt = next(it, None)
                     if nxt is not None:
-                        pending = (cycle, nxt)
-                        fut = pool.submit(self.prepare, cycle, nxt)
+                        step = CycleStep(cycle=cycle, obs=nxt)
+                        fut = pool.submit(self.prepare, step.cycle,
+                                          step.obs)
 
-                if snap_due(prep.cycle):
+                if snap_due(cur.cycle):
                     # Snapshot cycle: do NOT pipeline — the next prepare
                     # would mutate rng/domain/truth before the save, and
                     # the checkpoint would no longer be a cycle boundary.
-                    finish(prep)
+                    finish(cur)
                     submit_next()
                 else:
                     submit_next()
-                    finish(prep)
+                    finish(cur)
         return self.journal
 
     def _claim_prepare(self, fut, pool, cycle: int, obs):
@@ -726,16 +801,33 @@ class AssimilationEngine:
         return self.run(streams_mod.make_stream(name, m, cycles,
                                                 seed=seed, **kw))
 
-    def _run_cycle(self, prep: _Prepared) -> None:
+    def solve_step(self, step: CycleStep) -> CycleStep:
+        """Stage 2 of the cycle state machine: drive a prepared step
+        through the device solve (bounded TransientFault retries; wall
+        time measured to analysis-ready)."""
         t0 = time.perf_counter()
         x, background, hist, device_times = chaos_mod.retry_transient(
-            lambda: self._solve(prep),
+            lambda: self._solve(step.prep),
             retries=max(self.cfg.solve_retries, 0),
-            site="solve", cycle=prep.cycle)
-        x = jax.block_until_ready(x)
-        self.complete_cycle(prep, x, background,
-                            solve_time=time.perf_counter() - t0,
-                            hist=hist, device_times=device_times)
+            site="solve", cycle=step.prep.cycle)
+        step.analysis = jax.block_until_ready(x)
+        step.background = background
+        step.hist = hist
+        step.device_times = device_times
+        step.solve_time = time.perf_counter() - t0
+        return step
+
+    def finish_step(self, step: CycleStep) -> CycleStep:
+        """Stage 3: journal the solved step and publish its analysis."""
+        self.complete_cycle(step.prep, step.analysis, step.background,
+                            solve_time=step.solve_time, hist=step.hist,
+                            device_times=step.device_times)
+        return step
+
+    def _run_cycle(self, prep: _Prepared) -> None:
+        step = CycleStep(cycle=prep.cycle, obs=prep.obs,
+                         window=prep.window, prep=prep)
+        self.finish_step(self.solve_step(step))
 
     def reset_clock(self) -> None:
         """Restart the per-cycle wall-clock reference (``cycle_time`` of
@@ -766,6 +858,8 @@ class AssimilationEngine:
         t_cycle0 = self._t_last
         self._t_last = now
         self.analysis = x
+        if self.on_analysis is not None:
+            self.on_analysis(prep.cycle, x)
 
         # The cycle span covers the measured wall-clock by construction
         # (emitted after the fact from the same timestamps cycle_time is
@@ -833,13 +927,43 @@ class AssimilationEngine:
             comm_mvec_axis_bytes_per_cycle=(
                 prep.comm_mvec_axis_bytes_per_cycle),
             device_solve_times=[float(t) for t in device_times],
-            straggler_flags=flags))
+            straggler_flags=flags,
+            window=prep.window))
 
     # -- checkpoint / resume ------------------------------------------------
 
-    SNAPSHOT_VERSION = 1
+    # v2 adds nothing mandatory over v1 — it marks snapshots that may
+    # carry the optional "pint" metadata entry (window id + window count
+    # of a parallel-in-time window-boundary save) and may be assembled
+    # from a stashed host_state().  restore() accepts both versions.
+    SNAPSHOT_VERSION = 2
+    _SNAPSHOT_VERSIONS = (1, 2)
 
-    def snapshot(self) -> tuple:
+    def host_state(self) -> dict:
+        """Deep copy of the host-side mutable state ``prepare`` advances
+        (truth, rng, domain boundary state, trigger state, stream
+        cursor) at the current point of the prepare sweep.
+
+        The parallel-in-time engine prepares *every* cycle up front, so
+        a window boundary's host state is long gone by the time the
+        window's analyses exist — it stashes this at each boundary
+        during the sweep and hands it back to :meth:`snapshot` when the
+        completion phase reaches the boundary."""
+        cursor = self._stream.cursor if self._stream is not None else None
+        return {
+            "truth": np.asarray(self._truth, np.float64).copy(),
+            "rng_state": copy.deepcopy(self._rng.bit_generator.state),
+            "domain": {k: np.asarray(v).copy()
+                       for k, v in self.domain.state_dict().items()},
+            "streak": int(self._streak),
+            "last_rebalance_loads": (
+                None if self._last_rebalance_loads is None
+                else np.asarray(self._last_rebalance_loads).copy()),
+            "cursor": copy.deepcopy(cursor),
+        }
+
+    def snapshot(self, host_state: dict | None = None,
+                 extra_meta: dict | None = None) -> tuple:
         """(tree, metadata) capturing everything resume needs.
 
         Must be taken at a cycle boundary with no prepare in flight
@@ -849,35 +973,55 @@ class AssimilationEngine:
         JSON-side state: config, rng bit-generator state (exact — resume
         re-draws the same truth walk and data noise), journal, stream
         cursor, straggler EWMAs and the gram/schwarz autotune caches.
+
+        ``host_state`` substitutes a stashed :meth:`host_state` capture
+        for the live truth/rng/domain/trigger/cursor state — the
+        parallel-in-time engine's window-boundary snapshots, where the
+        prepare sweep has already advanced past the boundary while the
+        analysis/journal side (taken live) is exactly at it.
+        ``extra_meta`` merges extra JSON entries into the metadata
+        (e.g. the ``"pint"`` window descriptor).
         """
-        tree: dict = {"truth": np.asarray(self._truth, np.float64)}
+        hs = host_state
+        truth = (self._truth if hs is None else hs["truth"])
+        domain_sd = (self.domain.state_dict() if hs is None
+                     else hs["domain"])
+        last_loads = (self._last_rebalance_loads if hs is None
+                      else hs["last_rebalance_loads"])
+        tree: dict = {"truth": np.asarray(truth, np.float64)}
         if self.analysis is not None:
             tree["analysis"] = np.asarray(jax.device_get(self.analysis))
-        if self._last_rebalance_loads is not None:
-            tree["last_rebalance_loads"] = np.asarray(
-                self._last_rebalance_loads)
-        for k, v in self.domain.state_dict().items():
+        if last_loads is not None:
+            tree["last_rebalance_loads"] = np.asarray(last_loads)
+        for k, v in domain_sd.items():
             tree[_DOMAIN_PREFIX + k] = np.asarray(v)
         cursor = (self._stream.cursor
-                  if self._stream is not None else None)
+                  if self._stream is not None else None) \
+            if hs is None else hs["cursor"]
         metadata = {
             "snapshot_version": self.SNAPSHOT_VERSION,
             "config": dataclasses.asdict(self.cfg),
             "domain": self.domain.describe(),
-            "rng_state": self._rng.bit_generator.state,
-            "streak": int(self._streak),
+            "rng_state": (self._rng.bit_generator.state if hs is None
+                          else hs["rng_state"]),
+            "streak": int(self._streak if hs is None else hs["streak"]),
             "journal": self.journal.to_dict(),
             "cursor": cursor,
             "stragglers": [s.state_dict() for s in self._stragglers],
             "autotune": ops_mod.export_tune_caches(),
         }
+        if extra_meta:
+            metadata.update(extra_meta)
         return tree, metadata
 
-    def save_checkpoint(self, directory: str, step: int) -> str:
+    def save_checkpoint(self, directory: str, step: int,
+                        host_state: dict | None = None,
+                        extra_meta: dict | None = None) -> str:
         """Atomic engine checkpoint via the hash-verified manager
         primitives; ``step`` is the completed-cycle count.  Returns the
         final checkpoint path."""
-        tree, metadata = self.snapshot()
+        tree, metadata = self.snapshot(host_state=host_state,
+                                       extra_meta=extra_meta)
         t0 = time.perf_counter()
         path = ckpt_mod.save_pytree(tree, directory, step, metadata)
         m = meters_mod.get_meters()
@@ -908,7 +1052,7 @@ class AssimilationEngine:
         flat, manifest = ckpt_mod.restore_pytree(checkpoint)
         meta = manifest["metadata"]
         ver = meta.get("snapshot_version")
-        if ver != cls.SNAPSHOT_VERSION:
+        if ver not in cls._SNAPSHOT_VERSIONS:
             raise ValueError(f"unsupported engine snapshot version {ver}")
         cfg = config if config is not None \
             else EngineConfig(**meta["config"])

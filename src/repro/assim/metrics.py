@@ -97,6 +97,13 @@ class CycleMetrics:
     straggler_flags: list = dataclasses.field(default_factory=list)
                                 # device indices the EWMA-deadline
                                 # straggler monitor flagged this cycle
+    window: int = -1            # time-window id when the cycle ran under
+                                # the parallel-in-time engine (repro.
+                                # assim.timepar); -1 on sequential runs.
+                                # Deterministic given config (the window
+                                # partition is a pure function of the
+                                # cycle count), so it stays in the
+                                # bitwise deterministic_dict view
 
     def to_dict(self) -> dict:
         d = dataclasses.asdict(self)

@@ -127,6 +127,11 @@ class FleetServer:
         self.journals: Dict[object, Journal] = {}
         self.engines: Dict[object, AssimilationEngine] = {}
         self._sids: set = set()
+        # Per-sid intake record (checkpoint_dir / snapshot_every /
+        # forecast) — survives the _StreamState, which is dropped when a
+        # stream retires or fails, so readmit() can rebuild the stream
+        # from its latest snapshot after the fact.
+        self._stream_meta: Dict[object, dict] = {}
         self.stats: Dict[str, float] = {}
 
     # -- stream intake -----------------------------------------------------
@@ -162,6 +167,9 @@ class FleetServer:
                 f"solver dedicates one device per subdomain and cannot "
                 f"be batched on a problem axis")
         self._sids.add(sid)
+        self._stream_meta[sid] = {"checkpoint_dir": checkpoint_dir,
+                                  "snapshot_every": int(snapshot_every),
+                                  "forecast": forecast}
         if engine is None:
             engine = AssimilationEngine(config, forecast=forecast,
                                         domain=domain, chaos=chaos)
@@ -172,6 +180,57 @@ class FleetServer:
         self.scheduler.submit(_StreamState(
             sid, engine, stream, checkpoint_dir=checkpoint_dir,
             snapshot_every=snapshot_every))
+
+    def readmit(self, stream_id, *,
+                chaos: "chaos_mod.ChaosInjector | None" = None) -> None:
+        """Re-admit a retired or crashed stream from its latest
+        per-stream snapshot.
+
+        The stream must have been added with a ``checkpoint_dir`` and
+        must currently be out of the scheduler (retired after
+        exhaustion or failed — i.e. its journal has been recorded).
+        The engine and the observation stream continuation are rebuilt
+        with :func:`repro.runtime.elastic.resume_assim_engine` (latest
+        hash-verified snapshot wins; no completed cycle is replayed)
+        and resubmitted through the :class:`SlotScheduler` like any
+        new tenant — it queues FIFO and acquires a slot on the next
+        admission round.  ``chaos`` optionally attaches a fresh fault
+        injector to the resumed engine (the crashed run's injector is
+        *not* carried over).  Emits a ``fleet.stream_readmitted`` obs
+        event.
+        """
+        from repro.runtime import elastic as elastic_mod
+
+        if stream_id not in self._sids:
+            raise KeyError(f"unknown stream id {stream_id!r}")
+        if stream_id not in self.journals:
+            raise ValueError(
+                f"stream {stream_id!r} is still active or queued; only "
+                f"a retired/failed stream can be readmitted")
+        meta = self._stream_meta.get(stream_id, {})
+        ckpt_dir = meta.get("checkpoint_dir")
+        if ckpt_dir is None:
+            raise ValueError(
+                f"stream {stream_id!r} was added without a "
+                f"checkpoint_dir; nothing to readmit from")
+        engine, stream = elastic_mod.resume_assim_engine(
+            ckpt_dir, forecast=meta.get("forecast"), chaos=chaos)
+        if stream is None:
+            raise ValueError(
+                f"stream {stream_id!r}'s snapshot carries no resumable "
+                f"cursor (was it fed a plain iterable?)")
+        engine._stream = stream
+        self.engines[stream_id] = engine
+        # The stale partial journal is superseded by the restored
+        # engine's journal (which the next retirement re-records).
+        self.journals.pop(stream_id, None)
+        m = meters_mod.get_meters()
+        m.event("fleet.stream_readmitted", sid=stream_id,
+                resume_cycle=len(engine.journal.records))
+        m.inc("fleet.streams_readmitted")
+        self.scheduler.submit(_StreamState(
+            stream_id, engine, stream, checkpoint_dir=ckpt_dir,
+            snapshot_every=meta.get("snapshot_every", 0)))
 
     # -- serving loop ------------------------------------------------------
 

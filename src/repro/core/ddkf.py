@@ -337,6 +337,48 @@ def with_rhs(packed: PackedDD, b: jax.Array) -> PackedDD:
     return dataclasses.replace(packed, b=jnp.asarray(b, packed.A_loc.dtype))
 
 
+def pad_packed_width(packed: PackedDD, w_new: int) -> PackedDD:
+    """Re-pad a packing to a larger local block width ``w_new``.
+
+    Different cycles of a stream decompose with different max block
+    widths (DyDD moves boundaries), so their packings cannot be stacked
+    (:func:`stack_packed` requires equal ``w``).  Padding widens every
+    per-slot field with the same conventions ``pack_operator`` uses for
+    its own padding — zero columns in ``A_loc``, identity diagonal in
+    ``L_loc``, ``cols=-1``/``mask=0``, multiplicity 1, scatter to the
+    dump slot ``n`` — so the padded slots solve to exactly zero and the
+    assembled estimate is unchanged up to reduction order.  This is a
+    *tolerance-path* helper (the window-stacked Parareal fine solves):
+    widening changes the einsum reduction extents, so results agree with
+    the unpadded solve to ULPs, not bitwise.
+    """
+    if w_new < packed.w:
+        raise ValueError(f"cannot shrink a packing: w={packed.w} -> "
+                         f"{w_new}")
+    if w_new == packed.w:
+        return packed
+    pad = w_new - packed.w
+    p, w = packed.p, packed.w
+    L = jnp.zeros((p, w_new, w_new), packed.L_loc.dtype)
+    L = L.at[:, :w, :w].set(packed.L_loc)
+    diag = jnp.arange(w, w_new)
+    L = L.at[:, diag, diag].set(1.0)
+    pad2 = ((0, 0), (0, pad))
+    return dataclasses.replace(
+        packed,
+        A_loc=jnp.pad(packed.A_loc, ((0, 0), (0, 0), (0, pad))),
+        L_loc=L,
+        cols=jnp.pad(packed.cols, pad2, constant_values=-1),
+        mask=jnp.pad(packed.mask, pad2),
+        muov=jnp.pad(packed.muov, pad2),
+        wdiv=jnp.pad(packed.wdiv, pad2),
+        mult_loc=jnp.pad(packed.mult_loc, pad2, constant_values=1.0),
+        scatter_cols=jnp.pad(packed.scatter_cols, pad2,
+                             constant_values=packed.n),
+        gather_cols=jnp.pad(packed.gather_cols, pad2),
+        w=w_new)
+
+
 def _chol_solve(L, rhs):
     z = jax.scipy.linalg.solve_triangular(L, rhs, lower=True)
     return jax.scipy.linalg.solve_triangular(L.T, z, lower=False)
@@ -358,7 +400,8 @@ def _local_update(A_i, L_i, mask_i, muov_i, x_i, Ax, r, b):
 @partial(jax.jit, static_argnames=("iters", "residual_history"))
 def solve_vmapped(packed: PackedDD, iters: int = 60,
                   damping: float = 1.0,
-                  residual_history: bool = False):
+                  residual_history: bool = False,
+                  x0=None):
     """Additive-Schwarz DD-KF; returns the assembled global estimate.
 
     With ``residual_history=True`` the iteration runs under ``lax.scan``
@@ -367,6 +410,13 @@ def solve_vmapped(packed: PackedDD, iters: int = 60,
     Schwarz residual history the observability layer journals.  The
     default path is the historic ``fori_loop`` (identical numerics, no
     per-iteration output).
+
+    ``x0`` is an optional (n,) global warm start: the iteration begins
+    from its local gather instead of zeros.  The Schwarz map contracts to
+    the same fixed point from any start, so a warm start from a nearby
+    estimate (e.g. a coarse Parareal trajectory) buys the same accuracy
+    in fewer iterations; ``x0=None`` keeps the historic zero start
+    bitwise.
 
     The per-iteration local step follows the packing's resolved
     ``solve_kernel``: the historic jnp composition, or the fused
@@ -403,16 +453,19 @@ def solve_vmapped(packed: PackedDD, iters: int = 60,
         x_glob = assemble(packed, x_loc2)
         return gather_local(packed, x_glob)
 
-    x0 = jnp.zeros((packed.p, packed.w), dtype=packed.A_loc.dtype)
+    if x0 is None:
+        x_init = jnp.zeros((packed.p, packed.w), dtype=packed.A_loc.dtype)
+    else:
+        x_init = gather_local(packed, jnp.asarray(x0, packed.A_loc.dtype))
     if not residual_history:
-        x_loc = jax.lax.fori_loop(0, iters, lambda _, x: step(x), x0)
+        x_loc = jax.lax.fori_loop(0, iters, lambda _, x: step(x), x_init)
         return assemble(packed, x_loc)
 
     def body(x_loc, _):
         nxt = step(x_loc)
         return nxt, jnp.linalg.norm(nxt - x_loc)
 
-    x_loc, hist = jax.lax.scan(body, x0, None, length=iters)
+    x_loc, hist = jax.lax.scan(body, x_init, None, length=iters)
     return assemble(packed, x_loc), hist
 
 
@@ -484,6 +537,18 @@ def _solve_fleet_map(stacked: PackedDD, iters: int, damping,
         stacked)
 
 
+@partial(jax.jit, static_argnames=("iters", "residual_history"))
+def _solve_fleet_map_warm(stacked: PackedDD, x0, iters: int, damping,
+                          residual_history: bool):
+    # Separate jit from the cold path so x0=None callers keep their
+    # historic trace (and bitwise output) untouched.
+    return jax.lax.map(
+        lambda arg: solve_vmapped(arg[0], iters=iters, damping=damping,
+                                  residual_history=residual_history,
+                                  x0=arg[1]),
+        (stacked, x0))
+
+
 def _fleet_sharded_fn(mesh, axis: str, iters: int, residual_history: bool):
     """Jitted shard_map of the per-problem sweep over the fleet mesh axis
     (cached per (mesh, axis, iters, residual_history) — mesh objects
@@ -510,7 +575,7 @@ _FLEET_SHARDED_CACHE: dict = {}
 
 def solve_fleet(stacked: PackedDD, iters: int = 60, damping: float = 1.0,
                 residual_history: bool = False, mesh=None,
-                axis: str = "fleet"):
+                axis: str = "fleet", x0=None):
     """Advance every problem of a stacked cohort one solve in one dispatch.
 
     The per-problem sweep is ``lax.map`` over the leading problem axis —
@@ -527,10 +592,22 @@ def solve_fleet(stacked: PackedDD, iters: int = 60, damping: float = 1.0,
 
     Returns the (S, n) stacked estimates, or ``(x, hist)`` with ``hist``
     of shape (S, iters) under ``residual_history=True``.
+
+    ``x0`` (single-device path only) is an optional (S, n) stack of
+    global warm starts, one per problem — see :func:`solve_vmapped`.
     """
     if mesh is None:
+        if x0 is not None:
+            return _solve_fleet_map_warm(
+                stacked, jnp.asarray(x0, stacked.A_loc.dtype),
+                iters=iters, damping=damping,
+                residual_history=residual_history)
         return _solve_fleet_map(stacked, iters=iters, damping=damping,
                                 residual_history=residual_history)
+    if x0 is not None:
+        raise NotImplementedError(
+            "solve_fleet warm start is single-device only (the sharded "
+            "fleet path has no x0 plumbing)")
     k = int(mesh.shape[axis])
     S = int(stacked.A_loc.shape[0])
     if S % k:
@@ -750,6 +827,131 @@ def solve_shardmap(packed: PackedDD, mesh, axis="sub",
     if residual_history:
         return x, hist[0]
     return x
+
+
+# ---------------------------------------------------------------------------
+# Parallel-in-time path: independent *windows* x subdomains on a
+# ("time", "sub") mesh.
+# ---------------------------------------------------------------------------
+
+def _window_sharded_fn(mesh, time_axis: str, sub_axis: str, iters: int,
+                       n: int):
+    """Jitted shard_map of the window-stacked Schwarz sweep (cached per
+    (mesh, axes, iters, n) — mesh objects hash; shapes recompile under
+    jit as usual)."""
+    key = (mesh, time_axis, sub_axis, iters, n)
+    fn = _WINDOW_SHARDED_CACHE.get(key)
+    if fn is not None:
+        return fn
+    ks = int(mesh.shape[sub_axis])
+    # The (n,)-assembly keeps one extra slot as the -1-column dump and
+    # must split evenly over the sub axis for the reduce-scatter pair.
+    n_pad = -(-(n + 1) // ks) * ks
+
+    def per_device(A, L, mask, muov, wdiv, scat, gath, mult, r, b, x0,
+                   damping):
+        # A: (Kl, pl, m, w) — this device's window slice x subdomain
+        # slice; mult: (Kl, n); r, b, x0: (Kl, ·).  Windows are
+        # independent problems: every collective reduces over ``sub``
+        # only.
+        def scatter_part(xm):
+            def one(sc, x_k):
+                return jnp.zeros((n_pad,), x_k.dtype).at[
+                    sc.reshape(-1)].add(x_k.reshape(-1))
+            return jax.vmap(one)(scat, xm)          # (Kl, n_pad)
+
+        def assemble_glob(x):
+            part = scatter_part(x * mask)
+            chunk = jax.lax.psum_scatter(part, sub_axis,
+                                         scatter_dimension=1, tiled=True)
+            glob = jax.lax.all_gather(chunk, sub_axis, axis=1,
+                                      tiled=True)   # (Kl, n_pad)
+            return glob[:, :n] / mult               # (Kl, n)
+
+        def step(x):
+            # One additive-Schwarz iteration per window, batched over
+            # this device's (Kl, pl) slice — the jnp composition of
+            # solve_vmapped (fused-kernel packings ride this path too;
+            # the two steps agree to reduction-order ULPs).
+            Ax = jax.lax.psum(
+                jnp.einsum("kpmw,kpw->km", A, x * wdiv), sub_axis)
+            resid = (b[:, None, :] - Ax[:, None, :]
+                     + jnp.einsum("kpmw,kpw->kpm", A, x))
+            rhs = (jnp.einsum("kpmw,kpm->kpw", A, r[:, None, :] * resid)
+                   + muov * x) * mask
+            new = jax.vmap(jax.vmap(_chol_solve))(L, rhs) * mask
+            x2 = (1.0 - damping) * x + damping * new
+            x_glob = assemble_glob(x2)
+            return jax.vmap(lambda xg, g: xg[g])(x_glob, gath) * mask
+
+        # Warm start: gather the (Kl, n) global x0 into the local slots
+        # (an all-zero x0 gathers to exactly the historic zero start).
+        x_init = jax.vmap(lambda xg, g: xg[g])(x0, gath) * mask
+        x = jax.lax.fori_loop(0, iters, lambda _, v: step(v), x_init)
+        # (Kl, 1, n): the sub axis carries one replicated copy out.
+        return assemble_glob(x)[:, None, :]
+
+    ws = P(time_axis, sub_axis)
+    wt = P(time_axis)
+    fn = jax.jit(_compat.shard_map(
+        per_device, mesh=mesh,
+        in_specs=(ws, ws, ws, ws, ws, ws, ws, wt, wt, wt, wt, P()),
+        out_specs=ws))
+    _WINDOW_SHARDED_CACHE[key] = fn
+    return fn
+
+
+_WINDOW_SHARDED_CACHE: dict = {}
+
+
+def solve_window_stack(stacked: PackedDD, mesh, time_axis: str = "time",
+                       sub_axis: str = "sub", iters: int = 60,
+                       damping: float = 1.0, x0=None) -> jax.Array:
+    """Solve a window-stacked packing on a 2D ``("time", "sub")`` mesh.
+
+    ``stacked`` is a :func:`stack_packed` result whose leading axis is K
+    independent *windows* (one cycle's rhs-injected packing per active
+    window of the Parareal fine sweep).  The window axis shards over
+    ``time_axis`` and the subdomain axis over ``sub_axis`` — K * p
+    problems-by-subdomains on kt * ks devices, multiplying the usable
+    device count beyond the p-subdomain cap of :func:`solve_shardmap`.
+    Every collective (the (m,) product psum and the overlap-consistency
+    assembly's reduce-scatter + all-gather pair) runs over ``sub`` only:
+    windows never communicate, which is what makes the time axis free
+    parallelism.
+
+    The iteration is the jnp additive-Schwarz composition of
+    :func:`solve_vmapped` with allreduce state exchange — per-window
+    results agree with standalone ``solve_vmapped`` calls to
+    reduction-order ULPs (a tolerance contract; the Parareal driver's
+    bitwise degeneration path never reaches this function).
+
+    ``x0`` is an optional (K, n) stack of global warm starts, one per
+    window — see :func:`solve_vmapped`.  None starts from zeros (the
+    historic behaviour, bitwise).
+
+    Returns the (K, n) per-window global estimates.
+    """
+    K = int(stacked.A_loc.shape[0])
+    kt = int(mesh.shape[time_axis])
+    ks = int(mesh.shape[sub_axis])
+    if K % kt:
+        raise ValueError(
+            f"window count {K} does not divide over the {kt}-device "
+            f"'{time_axis}' mesh axis — pad the stack to a multiple")
+    if stacked.p % ks:
+        raise ValueError(
+            f"p={stacked.p} subdomains do not divide over the "
+            f"{ks}-device '{sub_axis}' mesh axis")
+    fn = _window_sharded_fn(mesh, time_axis, sub_axis, iters, stacked.n)
+    dt = stacked.A_loc.dtype
+    x0 = (jnp.zeros((K, stacked.n), dt) if x0 is None
+          else jnp.asarray(x0, dt))
+    out = fn(stacked.A_loc, stacked.L_loc, stacked.mask, stacked.muov,
+             stacked.wdiv, stacked.scatter_cols, stacked.gather_cols,
+             stacked.mult, stacked.r, stacked.b, x0,
+             jnp.asarray(damping, dt))
+    return out[:, 0]
 
 
 # ---------------------------------------------------------------------------

@@ -441,3 +441,64 @@ print("RESUMED")
 """, devices=new_p)
     assert out.returncode == 0, out.stderr[-2000:]
     assert "RESUMED" in out.stdout
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("kind", ["shelf", "kdtree"])
+@pytest.mark.parametrize("p_old,p_new", [(2, 4), (4, 8)])
+def test_elastic_growth_forced_host_subprocess(tmp_path, kind, p_old,
+                                               p_new):
+    """The growth direction: save at p under a forced-host mesh matching
+    p, restart at 2p under a doubled mesh.  The stream continues without
+    replaying any completed cycle, and the re-derived load-aware cut
+    beats a cold default decomposition of the same shape on the first
+    post-restart cycle's incoming imbalance (the point of carrying the
+    load history through the remesh; satellite_track's anisotropic swath
+    structure persists across cycles, so the journalled density is
+    informative)."""
+    ck = str(tmp_path / f"{kind}{p_old}")
+    shelf_grid = {2: "pr=2, pc=1", 4: "pr=2, pc=2"}
+    cfg_src = (
+        f"EngineConfig(n=128, ndim=2, nx=16, ny=8, {shelf_grid[p_old]}, "
+        f"iters=6)" if kind == "shelf"
+        else f"EngineConfig(n=128, domain_kind='kdtree', p={p_old}, "
+             f"nx=16, ny=8, iters=6)")
+    out = _run_child(f"""
+eng = AssimilationEngine({cfg_src})
+assert eng.p == {p_old}
+eng.run(streams.ResumableStream("satellite_track", 240, 8, seed=3),
+        checkpoint_dir=r"{ck}", snapshot_every=4)
+print("SAVED")
+""", devices=p_old)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "SAVED" in out.stdout
+
+    out = _run_child(f"""
+import os
+from repro.assim.metrics import imbalance_ratio
+from repro.core import domain as domain_mod
+from repro.core import kdtree as kdtree_mod
+eng, stream = elastic.resume_assim_engine(
+    os.path.join(r"{ck}", "step_00000004"), p={p_new})
+assert eng.p == {p_new}, eng.p
+assert stream.pos == 4, stream.pos
+if "{kind}" == "shelf":
+    cold_dom = domain_mod.ShelfTiling2D(nx=16, ny=8, pr=eng.domain.pr,
+                                        pc=eng.domain.pc)
+else:
+    cold_dom = kdtree_mod.KDTreeDomain(nx=16, ny=8, p={p_new})
+j = eng.run(stream)
+assert [r.cycle for r in j.records] == list(range(8))
+assert all(len(r.loads) == {p_new} for r in j.records[4:])
+assert all(len(r.loads) == {p_old} for r in j.records[:4])
+assert j.meta["resume"][-1] == {{"at_cycle": 4, "p": {p_new},
+                                 "remeshed": True}}
+it = streams.make_stream("satellite_track", 240, 8, seed=3)
+obs4 = [next(it) for _ in range(5)][4]
+warm = j.records[4].imbalance_before
+cold = imbalance_ratio(cold_dom.counts(obs4))
+assert warm < cold, (warm, cold)
+print("GROWN", warm, cold)
+""", devices=p_new)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "GROWN" in out.stdout

@@ -207,6 +207,40 @@ print("OK", d, err)
 """
 
 
+SCRIPT_TIMEPAR = r"""
+import jax
+jax.config.update("jax_enable_x64", True)
+import numpy as np
+from repro.assim import AssimilationEngine, EngineConfig, streams
+from repro.assim.timepar import TimeParEngine
+
+name, m, cycles, seed = "drifting_swarm", 160, 12, 0
+kw = dict(n=64, p=2, iters=60)
+
+seq = AssimilationEngine(EngineConfig(**kw))
+chain = []
+seq.on_analysis = lambda cycle, x: chain.append(np.asarray(x))
+seq.run(streams.make_stream(name, m, cycles, seed=seed))
+
+# 8 devices, W=4 windows, p=2 -> the auto mesh factors as
+# ("time": 4, "sub": 2): windows shard over time, subdomains over sub.
+cfg = EngineConfig(time_windows=4, pint_tol=1e-8, **kw)
+tp = TimeParEngine(cfg)
+journal = tp.run(streams.make_stream(name, m, cycles, seed=seed))
+pint = journal.meta["pint"]
+assert pint["mesh"] == {"time": 4, "sub": 2}, pint["mesh"]
+assert pint["converged"], pint
+assert len(tp.analyses) == cycles
+diff = max(float(np.max(np.abs(a - b)))
+           for a, b in zip(tp.analyses, chain))
+assert diff < 1e-6, diff
+for rw, rs in zip(journal.records, seq.journal.records):
+    assert rw.loads == rs.loads
+    assert rw.repartitioned == rs.repartitioned
+print("OK", pint["iters"], diff)
+"""
+
+
 def _run_forced_8dev(script: str):
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -244,6 +278,15 @@ def test_kdtree_shardmap_irregular_graph_8_devices():
     graph-general halo machinery beyond chains and grids), and the
     neighbour-only ppermute exchange matches allreduce to ULPs."""
     _run_forced_8dev(SCRIPT_KDTREE)
+
+
+@pytest.mark.slow
+def test_timepar_time_sub_mesh_8_devices():
+    """Parareal engine on a forced 8-device ("time", "sub") mesh:
+    windows shard over the time axis, subdomains over sub, and the
+    converged analysis chain matches the sequential engine within the
+    Parareal tolerance."""
+    _run_forced_8dev(SCRIPT_TIMEPAR)
 
 
 # ---------------------------------------------------------------------------

@@ -261,6 +261,64 @@ def test_fleet_add_stream_validation():
 
 
 # ---------------------------------------------------------------------------
+# Readmit: crash -> snapshot -> slot re-acquisition -> bitwise completion.
+# ---------------------------------------------------------------------------
+
+def test_fleet_readmit_crashed_stream(fresh_meters, tmp_path):
+    """A stream that crashes mid-serve (injected pack faults exhausting
+    the retry budget) is retired as failed; readmit() rebuilds it from
+    its latest per-stream snapshot, re-queues it through the
+    SlotScheduler, and the completed journal is bitwise-identical
+    (modulo wall-clock fields) to an uninterrupted run."""
+    from repro.runtime import chaos as chaos_mod
+
+    cfg = EngineConfig(n=48, p=4, iters=25)
+    name, m, cycles, seed = "drifting_swarm", 120, 6, 0
+
+    eng_ref = AssimilationEngine(cfg)
+    eng_ref.run(streams.make_stream(name, m, cycles, seed=seed))
+    ref_json = eng_ref.journal.deterministic_json()
+
+    # Crash s0 at cycle 3 (the fault re-fires on every retry) with a
+    # snapshot at every cycle boundary; a healthy companion stream
+    # keeps the server round loop honest.
+    ckpt = str(tmp_path / "s0")
+    inj = chaos_mod.ChaosInjector(chaos_mod.ChaosConfig(
+        pack_fault_cycles=(3,), fail_every_attempt=True))
+    server = FleetServer(max_active=2, max_retries=1, retry_backoff=0.0)
+    server.add_stream("s0", cfg,
+                      streams.ResumableStream(name, m, cycles, seed=seed),
+                      checkpoint_dir=ckpt, snapshot_every=1, chaos=inj)
+    server.add_stream("side", cfg,
+                      streams.make_stream("bursty_clusters", 120, 4,
+                                          seed=1))
+    journals = server.serve()
+    assert len(journals["s0"]) == 3          # crashed before cycle 3
+    assert len(journals["side"]) == 4
+
+    with pytest.raises(ValueError, match="checkpoint_dir"):
+        server.readmit("side")               # no snapshots configured
+    with pytest.raises(KeyError):
+        server.readmit("nope")
+
+    server.readmit("s0")                     # fresh engine, no chaos
+    with pytest.raises(ValueError, match="active or queued"):
+        server.readmit("s0")                 # already back in the queue
+    journals = server.serve()
+    assert len(journals["s0"]) == cycles
+    assert journals["s0"].deterministic_json() == ref_json
+
+    snap = fresh_meters.snapshot()
+    names = [e["name"] for e in snap["events"]]
+    assert "fleet.stream_failed" in names
+    assert "fleet.stream_readmitted" in names
+    assert snap["counters"]["fleet.streams_readmitted"] == 1
+    re_ev = [e for e in snap["events"]
+             if e["name"] == "fleet.stream_readmitted"][0]
+    assert re_ev["sid"] == "s0" and re_ev["resume_cycle"] == 3
+
+
+# ---------------------------------------------------------------------------
 # Forced 8-device fleet mesh (subprocess, like test_ddkf_multidevice).
 # ---------------------------------------------------------------------------
 

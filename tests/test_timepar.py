@@ -1,0 +1,227 @@
+"""Parallel-in-time (Parareal) engine: window partition, tolerance
+parity of the windowed analysis chain vs the sequential engine on every
+domain kind, bitwise degeneration at ``time_windows=1`` /
+``pint_max_iters=0``, and window-boundary checkpoint/resume."""
+import os
+
+import numpy as np
+import pytest
+
+from repro.assim import AssimilationEngine, EngineConfig, streams
+from repro.assim.timepar import (TimeParEngine, resolve_time_mesh,
+                                 window_bounds)
+from repro.runtime import elastic
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+
+# ---------------------------------------------------------------------------
+# Window partition / mesh resolution.
+# ---------------------------------------------------------------------------
+
+def test_window_bounds_partition():
+    assert window_bounds(8, 4) == [0, 2, 4, 6, 8]
+    assert window_bounds(7, 3) == [0, 2, 4, 7]
+    assert window_bounds(5, 8) == [0, 1, 2, 3, 4, 5]   # clamped to cycles
+    assert window_bounds(6, 1) == [0, 6]
+    b = window_bounds(11, 4)
+    assert b[0] == 0 and b[-1] == 11
+    assert all(b[i] < b[i + 1] for i in range(4))      # no empty window
+
+
+def test_resolve_time_mesh_single_device():
+    # One visible device: the only factorization is (1, 1), and it is
+    # valid for any p.
+    mesh = resolve_time_mesh(4, 3)
+    assert mesh is not None
+    assert dict(mesh.shape) == {"time": 1, "sub": 1}
+
+
+def test_config_validation():
+    with pytest.raises(ValueError, match="time_windows"):
+        AssimilationEngine(EngineConfig(n=32, p=2, time_windows=0))
+    with pytest.raises(ValueError, match="pint_tol"):
+        AssimilationEngine(EngineConfig(n=32, p=2, pint_tol=0.0))
+
+
+# ---------------------------------------------------------------------------
+# Tolerance parity vs the sequential engine, per domain kind.
+# ---------------------------------------------------------------------------
+
+def _sequential_chain(cfg, stream):
+    eng = AssimilationEngine(cfg)
+    chain = []
+    eng.on_analysis = lambda cycle, x: chain.append(np.asarray(x))
+    eng.run(stream)
+    return chain, eng.journal
+
+
+CASES = [
+    ("interval", dict(n=48, p=4, iters=30),
+     ("drifting_swarm", 120, 8, 0)),
+    ("shelf", dict(ndim=2, nx=12, ny=8, pr=2, pc=2, iters=25),
+     ("rotating_swarm", 200, 8, 1)),
+    ("kdtree", dict(ndim=2, nx=16, ny=12, domain_kind="kdtree", p=4,
+                    iters=25),
+     ("satellite_track", 240, 8, 2)),
+]
+
+
+@pytest.mark.parametrize("kind,cfg_kw,spec", CASES,
+                         ids=[c[0] for c in CASES])
+def test_windowed_matches_sequential_within_tol(kind, cfg_kw, spec):
+    name, m, cycles, seed = spec
+    seq_chain, seq_journal = _sequential_chain(
+        EngineConfig(**cfg_kw), streams.make_stream(name, m, cycles,
+                                                    seed=seed))
+
+    cfg = EngineConfig(time_windows=4, pint_tol=1e-8, **cfg_kw)
+    tp = TimeParEngine(cfg)
+    journal = tp.run(streams.make_stream(name, m, cycles, seed=seed))
+
+    pint = journal.meta["pint"]
+    assert pint["converged"] and pint["iters"] <= pint["max_iters"]
+    assert pint["correction_norms"][-1] <= cfg.pint_tol
+    # Strictly decreasing correction norms — the Parareal contraction.
+    assert all(a > b for a, b in zip(pint["correction_norms"],
+                                     pint["correction_norms"][1:]))
+
+    # The analysis chain matches the sequential engine within tolerance
+    # (boundary corrections converge to pint_tol; downstream cycles
+    # amplify by at most the per-cycle Lipschitz factor < 1).
+    assert len(tp.analyses) == len(seq_chain) == cycles
+    diff = max(float(np.max(np.abs(a - b)))
+               for a, b in zip(tp.analyses, seq_chain))
+    assert diff < 1e-6, diff
+
+    # The prepare sweep replays the sequential mutation chain exactly:
+    # journalled DyDD decisions are bitwise-identical, and every record
+    # carries its window id from the deterministic partition.
+    bounds = window_bounds(cycles, cfg.time_windows)
+    for c, (rw, rs) in enumerate(zip(journal.records,
+                                     seq_journal.records)):
+        assert rw.loads == rs.loads
+        assert rw.repartitioned == rs.repartitioned
+        assert rw.migrated == rs.migrated
+        w = next(i for i in range(len(bounds) - 1)
+                 if bounds[i] <= c < bounds[i + 1])
+        assert rw.window == w
+        assert rs.window == -1
+
+
+# ---------------------------------------------------------------------------
+# Warm-started fine sweeps (the work-optimal Parareal variant).
+# ---------------------------------------------------------------------------
+
+def test_warm_started_fine_sweeps_match_within_tol():
+    """With ``pint_fine_iters`` set, fine solves warm-start from the
+    coarse trajectory and run a reduced iteration count; coarse + fine
+    iterations together buy the accuracy, so the chain still lands
+    within tolerance of the (fully converged) sequential engine."""
+    name, m, cycles, seed = "drifting_swarm", 120, 8, 0
+    base = dict(n=48, p=4, iters=300)
+    seq_chain, _ = _sequential_chain(
+        EngineConfig(**base), streams.make_stream(name, m, cycles,
+                                                  seed=seed))
+
+    cfg = EngineConfig(time_windows=4, pint_tol=1e-8,
+                       pint_coarse_iters=30, pint_fine_iters=150, **base)
+    tp = TimeParEngine(cfg)
+    journal = tp.run(streams.make_stream(name, m, cycles, seed=seed))
+    pint = journal.meta["pint"]
+    assert pint["warm_start"] is True
+    assert pint["fine_iters"] == 150 and pint["coarse_iters"] == 30
+    assert pint["converged"]
+    diff = max(float(np.max(np.abs(a - b)))
+               for a, b in zip(tp.analyses, seq_chain))
+    assert diff < 1e-6, diff
+
+
+def test_solver_warm_start_from_converged_state():
+    """``x0=`` on the solve entry points: restarting from a converged
+    estimate reproduces it (the Schwarz map's fixed point does not
+    depend on the start), and an all-zero x0 is bitwise the historic
+    cold start."""
+    from repro.core import cls, dd, ddkf, dydd
+
+    rng = np.random.default_rng(0)
+    obs = np.sort(rng.beta(2, 5, size=200))
+    prob = cls.local_problem(jax.random.PRNGKey(0), 64, obs)
+    dec = dd.decompose_1d(64, dydd.dydd_1d(obs, 4).boundaries,
+                          overlap=1)
+    pk = ddkf.pack(prob, dec)
+    x_full = np.asarray(ddkf.solve_vmapped(pk, iters=200))
+    x_warm = np.asarray(ddkf.solve_vmapped(pk, iters=20, x0=x_full))
+    assert float(np.max(np.abs(x_warm - x_full))) < 1e-10
+    # Zero warm start == cold start, bitwise.
+    x_cold = np.asarray(ddkf.solve_vmapped(pk, iters=40))
+    x_zero = np.asarray(ddkf.solve_vmapped(pk, iters=40,
+                                           x0=np.zeros(64)))
+    assert np.array_equal(x_cold, x_zero)
+    # Fleet path threads per-problem warm starts.
+    stacked = ddkf.stack_packed([pk, pk])
+    xs = np.asarray(ddkf.solve_fleet(stacked, iters=20,
+                                     x0=np.stack([x_full, x_full])))
+    assert float(np.max(np.abs(xs - x_full[None]))) < 1e-10
+
+
+# ---------------------------------------------------------------------------
+# Bitwise degeneration.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("degenerate_kw", [dict(time_windows=1),
+                                           dict(pint_max_iters=0)],
+                         ids=["one_window", "zero_iters"])
+def test_degenerate_is_bitwise_sequential(degenerate_kw):
+    name, m, cycles, seed = "bursty_clusters", 120, 5, 3
+    base = dict(n=48, p=4, iters=30)
+    ref = AssimilationEngine(EngineConfig(**base))
+    ref.run(streams.make_stream(name, m, cycles, seed=seed))
+
+    tp = TimeParEngine(EngineConfig(
+        **base, **{"time_windows": 4, **degenerate_kw}))
+    tp.run(streams.make_stream(name, m, cycles, seed=seed))
+    assert "pint" not in tp.journal.meta
+    assert tp.journal.deterministic_json() == \
+        ref.journal.deterministic_json()
+    assert np.array_equal(np.asarray(tp.analysis),
+                          np.asarray(ref.analysis))
+
+
+# ---------------------------------------------------------------------------
+# Window-boundary checkpoints -> sequential resume.
+# ---------------------------------------------------------------------------
+
+def test_window_checkpoint_resumes_sequentially(tmp_path):
+    """The windowed run snapshots at window boundaries (snapshot_every
+    counts windows); restoring a mid-stream boundary checkpoint resumes
+    the *sequential* engine from that boundary and lands within the
+    Parareal tolerance of the windowed run's tail."""
+    name, m, cycles, seed = "drifting_swarm", 120, 8, 0
+    cfg = EngineConfig(n=48, p=4, iters=30, time_windows=4,
+                       pint_tol=1e-10)
+    ckpt = str(tmp_path / "pint")
+    tp = TimeParEngine(cfg)
+    tp.run(streams.ResumableStream(name, m, cycles, seed=seed),
+           checkpoint_dir=ckpt, snapshot_every=1)
+    # 4 windows over 8 cycles -> boundary snapshots at steps 2,4,6,8.
+    present = sorted(d for d in os.listdir(ckpt) if d.startswith("step_"))
+    assert present == [f"step_{s:08d}" for s in (2, 4, 6, 8)]
+
+    eng, stream = elastic.resume_assim_engine(
+        os.path.join(ckpt, "step_00000004"))
+    assert stream is not None and stream.pos == 4
+    assert len(eng.journal.records) == 4
+    eng.run(stream)
+    assert len(eng.journal.records) == cycles
+    # Same DyDD decisions on the tail (host state carried the exact
+    # sequential rng/domain chain) ...
+    for rr, rw in zip(eng.journal.records[4:], tp.journal.records[4:]):
+        assert rr.loads == rw.loads
+        assert rr.repartitioned == rw.repartitioned
+    # ... and the final analysis within the Parareal tolerance band.
+    diff = float(np.max(np.abs(np.asarray(eng.analysis)
+                               - np.asarray(tp.analysis))))
+    assert diff < 1e-6, diff
